@@ -1,0 +1,53 @@
+"""Framework benchmarks: JAX descriptor engine + kernel throughput (CPU).
+
+Wall times are CPU-host numbers (interpret-mode kernels); the TPU-relevant
+performance story is the roofline analysis (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import from_gather
+from repro.core.engine import execute_blocked_2d
+from repro.kernels import descriptor_copy_op, moe_gather_op
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows: list) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for rows, unit in [(256, 256), (1024, 512)]:
+        src = jnp.asarray(rng.standard_normal((rows, unit)), jnp.float32)
+        dst = jnp.zeros((rows, unit), jnp.float32)
+        idx = jnp.asarray(rng.permutation(rows), jnp.int32)
+        d = from_gather(np.asarray(idx), 1)
+
+        us = _time(lambda: execute_blocked_2d(
+            type(d).create(idx, jnp.arange(rows), jnp.ones(rows)),
+            src, dst)[0])
+        gbps = rows * unit * 4 / (us / 1e6) / 1e9
+        csv_rows.append((f"engine_blocked_{rows}x{unit}", us,
+                         f"GB/s={gbps:.2f}"))
+        out[f"blocked_{rows}x{unit}"] = gbps
+
+        us = _time(lambda: descriptor_copy_op(
+            idx, jnp.arange(rows, dtype=jnp.int32), src, dst))
+        csv_rows.append((f"kernel_descriptor_copy_{rows}x{unit}", us,
+                         "interpret_mode=True"))
+
+        us = _time(lambda: moe_gather_op(idx, src))
+        csv_rows.append((f"kernel_moe_gather_{rows}x{unit}", us,
+                         "interpret_mode=True"))
+    return out

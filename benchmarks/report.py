@@ -1,0 +1,92 @@
+"""Regenerate EXPERIMENTS.md's §Roofline tables and §Perf comparisons from
+the dry-run JSONs. Invoked manually after sweeps:
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import markdown_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def perf_row(tag: str, path: str) -> str:
+    d = _load(path)
+    if d["status"] != "ok":
+        return f"| {tag} | ERROR | | | | | |"
+    r = d["roofline"]
+    hbm = d["memory"]["peak_per_device_bytes"] / 2**30
+    return (f"| {tag} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['bottleneck']} | "
+            f"{r['mfu']:.3f} | {hbm:.1f} |")
+
+
+def perf_table(title: str, rows: list[str]) -> str:
+    head = (f"**{title}**\n\n"
+            "| variant | compute s | memory s | collective s | bottleneck |"
+            " roofline MFU | HBM GiB/chip |\n|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    out = []
+    out.append("### Single-pod (16×16 = 256 chips) — all 40 cells\n")
+    out.append(markdown_table("single"))
+    out.append("\n### Multi-pod (2×16×16 = 512 chips)\n")
+    out.append(markdown_table("multipod"))
+
+    perf_dir = os.path.join(ROOT, "experiments", "perf")
+    base = os.path.join(ROOT, "experiments", "dryrun_baseline")
+
+    def p(variant, mesh, arch, shape):
+        return os.path.join(perf_dir, variant, mesh, f"{arch}__{shape}.json")
+
+    def b(mesh, arch, shape):
+        return os.path.join(base, mesh, f"{arch}__{shape}.json")
+
+    out.append("\n### §Perf variant measurements\n")
+    out.append(perf_table(
+        "Cell A — deepseek-v2-236b × train_4k × single",
+        [perf_row("A0 baseline (GSPMD gather MoE)",
+                  b("single", "deepseek-v2-236b", "train_4k")),
+         perf_row("A1 expert-parallel shard_map dispatch",
+                  p("A1_ep", "single", "deepseek-v2-236b", "train_4k")),
+         perf_row("A2 + bf16 cast-before-all-gather",
+                  p("A2_ep_bf16cast", "single", "deepseek-v2-236b",
+                    "train_4k"))]))
+    out.append("")
+    out.append(perf_table(
+        "Cell B — qwen3-14b × decode_32k × single",
+        [perf_row("B0 baseline (training FSDP param layout)",
+                  b("single", "qwen3-14b", "decode_32k")),
+         perf_row("B1 TP-only serving params",
+                  p("B1_tponly", "single", "qwen3-14b", "decode_32k")),
+         perf_row("B2 + bf16 params",
+                  p("B2_tponly_bf16", "single", "qwen3-14b", "decode_32k")),
+         perf_row("B3 + KV-cache sequence sharding over TP",
+                  p("B3_tponly_bf16_kvshard", "single", "qwen3-14b",
+                    "decode_32k"))]))
+    out.append("")
+    out.append(perf_table(
+        "Cell C — deepseek-v2-236b × prefill_32k × single",
+        [perf_row("C0 baseline (GSPMD MoE, FSDP params)",
+                  b("single", "deepseek-v2-236b", "prefill_32k")),
+         perf_row("C1 expert-parallel dispatch",
+                  p("C1_ep", "single", "deepseek-v2-236b", "prefill_32k")),
+         perf_row("C2 + TP-only bf16 serving params",
+                  p("C2_ep_tponly_bf16", "single", "deepseek-v2-236b",
+                    "prefill_32k"))]))
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Roofline tables (deliverable g): read experiments/dryrun/ JSONs and emit
+the per-(arch x shape x mesh) three-term table used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | useful FLOPs | roofline MFU | HBM GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh):
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"ERROR | — | — | — |")
+            continue
+        r = c["roofline"]
+        hbm = c["memory"]["peak_per_device_bytes"] / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['mfu']:.3f} | {hbm:.1f} |")
+    return "\n".join(rows)
+
+
+def run(csv_rows: list) -> dict:
+    out = {}
+    for mesh in ("single", "multipod"):
+        for c in load_cells(mesh):
+            if c["status"] != "ok":
+                continue
+            r = c["roofline"]
+            csv_rows.append(
+                (f"roofline_{mesh}_{c['arch']}_{c['shape']}", 0.0,
+                 f"bottleneck={r['bottleneck']};mfu={r['mfu']:.3f};"
+                 f"compute_s={r['compute_s']:.4f};memory_s="
+                 f"{r['memory_s']:.4f};collective_s={r['collective_s']:.4f}"))
+            out[(mesh, c["arch"], c["shape"])] = r["mfu"]
+    return out
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multipod"):
+        print(f"\n## {mesh}\n")
+        print(markdown_table(mesh))

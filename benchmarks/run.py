@@ -1,0 +1,31 @@
+"""Benchmark orchestrator. One module per paper table/figure; prints
+``name,us_per_call,derived`` CSV (deliverable d)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (
+    bench_engine,
+    fig4_utilization,
+    fig5_hitrate,
+    roofline,
+    table2_area,
+    table4_latency,
+)
+
+
+def main() -> None:
+    csv_rows: list = []
+    fig4_utilization.run(csv_rows)
+    fig5_hitrate.run(csv_rows)
+    table2_area.run(csv_rows)
+    table4_latency.run(csv_rows)
+    bench_engine.run(csv_rows)
+    roofline.run(csv_rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

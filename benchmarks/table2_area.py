@@ -1,0 +1,23 @@
+"""Tables II-III reproduction: area model + FPGA resource table."""
+from __future__ import annotations
+
+from repro.core import area_model as A
+
+
+def run(csv_rows: list) -> dict:
+    points = {"base": (4, 0), "speculation": (4, 4), "scaled": (24, 24)}
+    out = {}
+    for name, (d, s) in points.items():
+        r = A.report(name, d, s)
+        out[name] = r.model_kge
+        csv_rows.append((f"table2_area_{name}", 0.0,
+                         f"model_kGE={r.model_kge:.1f};published="
+                         f"{r.published_kge};fmax_GHz={r.fmax_ghz}"))
+    sav = A.headline_fpga_savings()
+    csv_rows.append(("table3_fpga_savings", 0.0,
+                     f"lut_savings={sav['lut_savings']:.3f};"
+                     f"ff_savings={sav['ff_savings']:.3f};paper=0.11/0.23"))
+    for cfg, row in A.TABLE_III.items():
+        csv_rows.append((f"table3_{cfg}", 0.0,
+                         f"luts={row['luts']};ffs={row['ffs']}"))
+    return out

@@ -1,0 +1,25 @@
+"""Table IV reproduction: i-rf / rf-rb / r-w latencies vs LogiCORE."""
+from __future__ import annotations
+
+import time
+
+from repro.core.simulator import table_iv
+
+
+def run(csv_rows: list) -> dict:
+    t0 = time.perf_counter()
+    t = table_iv()
+    us = (time.perf_counter() - t0) * 1e6
+    for who in ("ours", "logicore"):
+        for latency, val in t[who]["rf_rb"].items():
+            paper = t["paper"][who]["rf_rb"][latency]
+            csv_rows.append((f"table4_{who}_rfrb_L{latency}", us / 6,
+                             f"measured={val:.0f};paper={paper}"))
+        csv_rows.append((f"table4_{who}_irf", 0.0,
+                         f"measured={t[who]['i_rf']};paper="
+                         f"{t['paper'][who]['i_rf']}"))
+    ours = t["ours"]["i_rf"] + t["ours"]["rf_rb"][13]
+    lc = t["logicore"]["i_rf"] + t["logicore"]["rf_rb"][13]
+    csv_rows.append(("table4_launch_latency_ratio", 0.0,
+                     f"measured={lc/ours:.2f};paper=1.66"))
+    return t

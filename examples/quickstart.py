@@ -1,0 +1,68 @@
+"""Quickstart: the paper's descriptor mechanism end to end.
+
+1. Describe an irregular (2-D strided) transfer as a descriptor chain.
+2. Plan a sequential layout -> the hardware speculator's hit rate becomes 1.0.
+3. Execute with the JAX engine and the Pallas kernel; verify they agree.
+4. Ask the cycle simulator what bus utilization this transfer pattern gets
+   with and without speculative prefetching.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SimConfig,
+    from_strided_2d,
+    plan_sequential_layout,
+    simulate,
+    to_packed,
+)
+from repro.core.engine import execute_chain_host, execute_serial
+from repro.kernels import chain_copy_op
+
+# -- 1. An irregular transfer: gather a 16x64 tile out of a 64x256 image. ----
+ROW, NROWS = 64, 16
+chain = from_strided_2d(src_base=0, dst_base=0, row_len=ROW, num_rows=NROWS,
+                        src_stride=256, dst_stride=ROW)
+print(f"built a chain of {chain.num_descriptors} descriptors "
+      f"({ROW} elements each)")
+packed = to_packed(chain, elem_bytes=4)
+print(f"packed descriptor table: {packed.nbytes} bytes "
+      f"({packed.nbytes // len(packed)} B/descriptor — paper Listing 1)")
+
+# -- 2. Sequential layout -> speculation hits by construction. ---------------
+table, hit_rate = plan_sequential_layout(chain)
+print(f"planned layout speculation hit rate: {hit_rate:.0%}")
+
+# -- 3. Execute: host oracle == jitted serial engine == Pallas kernel. -------
+rng = np.random.default_rng(0)
+src = rng.standard_normal(64 * 256).astype(np.float32)
+dst = np.zeros(NROWS * ROW, np.float32)
+want, _ = execute_chain_host(chain, src, dst)
+got, _ = execute_serial(chain, jnp.asarray(src), jnp.asarray(dst),
+                        max_len=ROW)
+np.testing.assert_array_equal(np.asarray(got), want)
+
+# Row-pool form for the kernel (rows of 64 elements = fixed "bursts");
+# element offsets become row ids in the (256/ROW)-rows-per-line pool.
+from repro.core.descriptor import DescriptorArray
+
+src_rows = jnp.asarray(src.reshape(256, ROW))
+dst_rows = jnp.zeros((NROWS, ROW), jnp.float32)
+row_ids = np.asarray(chain.src) // 256 * (256 // ROW)
+row_chain = DescriptorArray.create(row_ids, np.arange(NROWS), np.ones(NROWS))
+kout = chain_copy_op(row_chain, src_rows, dst_rows)
+np.testing.assert_array_equal(np.asarray(kout).reshape(-1),
+                              want.reshape(NROWS, ROW).reshape(-1))
+print("host oracle == serial engine == Pallas chain_copy  [OK]")
+
+# -- 4. What does the DMAC get out of this pattern? ---------------------------
+n_bytes = ROW * 4
+for cfg in (SimConfig.base(), SimConfig.speculation()):
+    r = simulate(cfg, mem_latency=13, transfer_bytes=n_bytes,
+                 hit_rate=hit_rate)
+    print(f"{cfg.name:12s} @DDR3, {n_bytes}B rows: bus utilization "
+          f"{r.utilization:.3f} (ideal {r.ideal:.3f})")
+print("speculative prefetching closes the descriptor-fetch gap — the "
+      "paper's core claim, reproduced.")

@@ -1,0 +1,59 @@
+"""End-to-end serving driver: continuous batching over a small LM with
+paged-KV bookkeeping (descriptor chains as block tables).
+
+Run: PYTHONPATH=src python examples/serve_paged.py [--arch qwen2.5-3b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import PagedKVCache, Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"serving {cfg.name}: {cfg.num_layers}L d={cfg.d_model}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, capacity=args.capacity, max_len=96)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for uid in range(args.requests):
+        prompt = list(rng.integers(1, cfg.vocab_size, rng.integers(4, 12)))
+        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=8))
+    done = engine.run(max_steps=2000)
+    dt = time.perf_counter() - t0
+
+    total_tokens = sum(len(r.output) for r in done.values())
+    print(f"completed {len(done)}/{args.requests} requests in {dt:.1f}s "
+          f"({engine.steps} engine steps, {total_tokens} tokens)")
+    for uid, r in sorted(done.items()):
+        print(f"  req {uid}: prompt[{len(r.prompt)}] -> {r.output}")
+    assert len(engine.poll_completed()) == len(done), "writeback flags!"
+
+    # Paged pool bookkeeping demo: per-sequence descriptor chains.
+    pool = PagedKVCache(page=16, num_pages=64, max_seqs=args.capacity,
+                        max_pages_per_seq=8, kv_heads=cfg.num_kv_heads or 1,
+                        head_dim=cfg.head_dim_ or 8)
+    pool.admit(0)
+    for _ in range(40):
+        pool.append(0, np.zeros((pool.kv_heads, pool.head_dim)),
+                    np.zeros((pool.kv_heads, pool.head_dim)))
+    chain = pool.chain(0)
+    print(f"paged cache: seq 0 holds {chain.num_descriptors} pages; "
+          f"speculation hit rate "
+          f"{pool.alloc.speculation_hit_rate(0):.0%} (sequential allocator)")
+
+
+if __name__ == "__main__":
+    main()

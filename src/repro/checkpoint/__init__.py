@@ -1,0 +1,2 @@
+"""Checkpoint substrate: atomic, manifest-driven, elastic-restore capable."""
+from .checkpointer import Checkpointer  # noqa: F401

@@ -1,0 +1,11 @@
+"""Distribution substrate: logical-axis sharding, policies, fault tolerance."""
+from .shardlib import (  # noqa: F401
+    axis_size,
+    clear_mesh,
+    current_mesh,
+    current_rules,
+    logical_spec,
+    set_mesh,
+    set_rules,
+    shard,
+)

@@ -1,0 +1,62 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh topology.
+
+On node failure the controller rebuilds a smaller mesh (e.g. 2 pods -> 1),
+calls :func:`reshard_checkpoint` to land the last committed state on the new
+topology, and training resumes — the checkpoint manifest (descriptor-style
+array records, DESIGN.md §3) carries everything needed.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig
+
+from .sharding import param_specs, to_named, train_state_specs
+
+
+def reshard_checkpoint(
+    ckpt: Checkpointer,
+    step: int,
+    cfg: ModelConfig,
+    new_mesh: Mesh,
+    state_shapes: Any,
+) -> Tuple[Any, dict]:
+    """Restore `step` with shardings computed for `new_mesh`.
+
+    `state_shapes` is the TrainState shape tree for the *same model* (the
+    mesh doesn't change parameter shapes, only their placement), typically
+    from `launch.inputs.train_state_specs_shapes`.
+    """
+    specs = train_state_specs(cfg, new_mesh, state_shapes)
+    shardings = to_named(specs, new_mesh)
+    return ckpt.restore(step, state_shapes, shardings=shardings)
+
+
+def survive_shrink(
+    ckpt: Checkpointer,
+    cfg: ModelConfig,
+    state_shapes: Any,
+    make_mesh,
+    *,
+    max_attempts: int = 3,
+) -> Optional[Tuple[Any, dict, Mesh]]:
+    """Controller-side recovery loop: try progressively smaller meshes until
+    the latest committed checkpoint restores (capacity permitting)."""
+    step = ckpt.latest_step()
+    if step is None:
+        return None
+    last_err = None
+    for attempt in range(max_attempts):
+        try:
+            mesh = make_mesh(attempt)
+            state, extra = reshard_checkpoint(ckpt, step, cfg, mesh,
+                                              state_shapes)
+            return state, extra, mesh
+        except Exception as e:  # noqa: BLE001 — controller retries smaller
+            last_err = e
+    raise RuntimeError(
+        f"elastic recovery failed after {max_attempts} topologies: {last_err}")

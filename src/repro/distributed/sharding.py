@@ -1,0 +1,237 @@
+"""Sharding policies: FSDP x TP x EP (x SP for long-context decode).
+
+Parameters and optimizer state shard (fsdp_axes, "model") MaxText-style
+(ZeRO-3 equivalent; GSPMD inserts the all-gathers). Activations shard batch
+over (pod, data); logical axes inside the model map via shardlib rules.
+KV/SSM caches shard batch over data — or the *sequence/page* axis when
+global_batch < data-axis size (long-context SP with distributed partial
+softmax).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def activation_rules(mesh: Mesh) -> dict:
+    """Logical-axis -> mesh-axis map consumed by shardlib."""
+    fs = fsdp_axes(mesh)
+    return {
+        "batch": fs if len(fs) > 1 else (fs[0] if fs else None),
+        "seq": None,
+        "heads": "model" if "model" in mesh.shape else None,
+        "kv_heads": None,          # GQA kv heads replicated across TP
+        "d_ff": "model" if "model" in mesh.shape else None,
+        "experts": "model" if "model" in mesh.shape else None,
+        "expert_cap": fs if len(fs) > 1 else (fs[0] if fs else None),
+        "vocab": "model" if "model" in mesh.shape else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    fs = fsdp_axes(mesh)
+    FSDP = fs if len(fs) > 1 else (fs[0] if fs else None)
+    M = "model" if "model" in mesh.shape else None
+    leaf = names[-1]
+    under_slots = "slots" in names
+    under_moe = "ffn" in names and any(n == "router" or leaf in
+                                       ("router",) for n in names)
+
+    def spec(*entries):
+        # Stacked period params carry a leading (periods,) axis.
+        if under_slots:
+            entries = (None,) + entries
+        # Guard divisibility: drop axes that don't divide the dim.
+        fixed = []
+        base = 1 if under_slots else 0
+        for i, e in enumerate(entries):
+            if e is None:
+                fixed.append(None)
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape.get(a, 1)
+            dim = shape[i] if i < len(shape) else 1
+            fixed.append(e if dim % size == 0 else None)
+        return P(*fixed)
+
+    ndim_eff = len(shape) - (1 if under_slots else 0)
+
+    if leaf == "embedding":
+        return spec(M, FSDP)
+    if leaf == "unembed":
+        return spec(FSDP, M)
+    if leaf == "wq":
+        return spec(FSDP, M, None)
+    if leaf in ("wk", "wv"):
+        return spec(FSDP, None, None)
+    if leaf == "wo":
+        return spec(M, None, FSDP)
+    if leaf == "bq":
+        return spec(M, None)
+    if leaf in ("bk", "bv"):
+        return spec(None, None)
+    if leaf in ("q_down", "kv_down"):
+        return spec(FSDP, None)
+    if leaf in ("q_up", "kv_up"):
+        return spec(None, M, None)
+    if leaf == "router":
+        return spec(None, None)
+    if leaf in ("w_gate", "w_up"):
+        if ndim_eff == 3:           # MoE experts (E, d, f)
+            return spec(M, FSDP, None)
+        return spec(FSDP, M)
+    if leaf == "w_down":
+        if ndim_eff == 3:
+            return spec(M, None, FSDP)
+        return spec(M, FSDP)
+    if leaf == "in_proj":
+        return spec(FSDP, None)
+    if leaf == "out_proj":
+        return spec(None, FSDP)
+    if leaf in ("conv_w", "conv_b", "dt_bias", "A_log", "D", "scale"):
+        return spec(*(None,) * ndim_eff)
+    # Fallback: replicate.
+    return spec(*(None,) * ndim_eff)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, shapes_tree: Any) -> Any:
+    """PartitionSpec pytree congruent with `shapes_tree` (from param_shapes)."""
+    def assign(path, leaf):
+        return _param_spec(path, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(assign, shapes_tree)
+
+
+def serving_param_specs(cfg: ModelConfig, mesh: Mesh, shapes_tree: Any) -> Any:
+    """Serving layout: TP over `model` only; replicated over (pod, data).
+
+    Training's FSDP layout would re-all-gather every parameter on every
+    decode step; serving replicas keep full TP shards resident instead
+    (EXPERIMENTS.md §Perf-3).
+    """
+    fs = fsdp_axes(mesh)
+
+    def strip(spec: P) -> P:
+        entries = []
+        for e in spec:
+            if e is None:
+                entries.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a not in fs)
+                entries.append(kept if len(kept) > 1 else
+                               (kept[0] if kept else None))
+            else:
+                entries.append(None if e in fs else e)
+        return P(*entries)
+
+    return jax.tree.map(strip, param_specs(cfg, mesh, shapes_tree),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / state specs
+# ---------------------------------------------------------------------------
+
+def batch_axis(mesh: Mesh, global_batch: int):
+    """Largest prefix of (pod, data) that divides global_batch."""
+    axes = []
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and global_batch % (size * mesh.shape[a]) == 0:
+            axes.append(a)
+            size *= mesh.shape[a]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def train_batch_specs(mesh: Mesh, global_batch: int, batch: Any) -> Any:
+    BA = batch_axis(mesh, global_batch)
+
+    def assign(path, leaf):
+        return P(*((BA,) + (None,) * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def train_state_specs(cfg: ModelConfig, mesh: Mesh, state_shapes: Any) -> Any:
+    """TrainState(params, opt(step,m,v), residuals) -> spec tree."""
+    from repro.train.step import TrainState
+    from repro.optim import AdamWState
+    p_specs = param_specs(cfg, mesh, state_shapes.params)
+    return TrainState(
+        params=p_specs,
+        opt=AdamWState(step=P(),
+                       m=param_specs(cfg, mesh, state_shapes.opt.m),
+                       v=param_specs(cfg, mesh, state_shapes.opt.v)),
+        residuals=None if state_shapes.residuals is None
+        else param_specs(cfg, mesh, state_shapes.residuals),
+    )
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state_shapes: Any,
+                       global_batch: int, *,
+                       kv_seq_axis: Optional[str] = None) -> Any:
+    """DecodeState spec tree. Batch shards over data when divisible;
+    otherwise the cache *sequence* axis shards over data (long-context SP).
+    kv_seq_axis="model" additionally shards cache positions over TP ranks
+    (GQA kv-heads < TP degree make head-sharding impossible; sequence
+    sharding is the lever — EXPERIMENTS.md §Perf-3)."""
+    from repro.models.attention import KVCacheView
+    from repro.models.mamba import MambaCache
+    from repro.models.transformer import CrossCache
+
+    BA = batch_axis(mesh, global_batch)
+    seq_shard = "data" if BA is None and "data" in mesh.shape else None
+    if kv_seq_axis and kv_seq_axis in mesh.shape and seq_shard is None:
+        seq_shard = kv_seq_axis
+    M = "model" if "model" in mesh.shape else None
+
+    def walk(node, stacked: bool):
+        lead = (None,) if stacked else ()
+        if isinstance(node, KVCacheView):
+            return KVCacheView(
+                k=P(*lead, BA, seq_shard, None, None),
+                v=P(*lead, BA, seq_shard, None, None),
+                kv_pos=P(*lead, BA, seq_shard))
+        if isinstance(node, MambaCache):
+            hdim = node.state.shape[len(lead) + 1]
+            h_ax = M if (M and hdim % mesh.shape["model"] == 0) else None
+            return MambaCache(
+                conv=P(*lead, BA, None, None),
+                state=P(*lead, BA, h_ax, None, None))
+        if isinstance(node, CrossCache):
+            return CrossCache(k=P(*lead, BA, None, None, None),
+                              v=P(*lead, BA, None, None, None))
+        if isinstance(node, dict):
+            return {k: walk(v, stacked or k in ("slots", "cross_slots"))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)) and not hasattr(node, "_fields"):
+            return type(node)(walk(v, stacked) for v in node)
+        # Leaves outside caches (cur_pos etc.): batch-sharded on axis 0.
+        nd = getattr(node, "ndim", 0)
+        return P(*((BA,) + (None,) * max(nd - 1, 0)))
+
+    from repro.models.model import DecodeState
+    assert isinstance(state_shapes, DecodeState)
+    return DecodeState(caches=walk(state_shapes.caches, False),
+                       cur_pos=P(BA))

@@ -1,0 +1,70 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a per-launch rule table maps them to mesh axes (MaxText-style).
+
+Models call ``shard(x, "batch", "seq", "heads", None)``; outside a mesh
+context this is the identity, so smoke tests and CPU examples never touch
+device state.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def clear_mesh() -> None:
+    _state.mesh = None
+    _state.rules = {}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def set_rules(rules: Rules) -> None:
+    _state.rules = dict(rules)
+
+
+def current_rules() -> Rules:
+    return getattr(_state, "rules", {})
+
+
+def axis_size(mesh_axis: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or mesh_axis not in mesh.shape:
+        return 1
+    return mesh.shape[mesh_axis]
+
+
+def logical_spec(*logical_axes: Optional[str]) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules."""
+    rules = current_rules()
+    entries = []
+    for ax in logical_axes:
+        if ax is None:
+            entries.append(None)
+        else:
+            entries.append(rules.get(ax))
+    return P(*entries)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): got {len(logical_axes)} axes for rank-{x.ndim} tensor")
+    spec = logical_spec(*logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

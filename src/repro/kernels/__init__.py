@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from .ops import (  # noqa: F401
+    chain_copy_op,
+    descriptor_copy_op,
+    flash_attention_op,
+    moe_combine_op,
+    moe_gather_op,
+    paged_attention_op,
+    prefetched_chain_copy_op,
+)

@@ -1,0 +1,84 @@
+"""Descriptor-driven row copy — the paper's DMAC as a Pallas TPU kernel.
+
+The descriptor stream (src row, dst row) is passed as *scalar-prefetch*
+operands (``pltpu.PrefetchScalarGridSpec``): Pallas materializes them in SMEM
+*before* the grid runs and feeds them to the ``BlockSpec.index_map``s, so the
+address of step i+1's block is known while step i's payload streams — exactly
+the paper's speculative descriptor prefetching, realized with the TPU's
+native double-buffered grid pipeline (§II-C; DESIGN.md §2).
+
+Rows are the transfer unit (the fixed "burst"): irregularity lives entirely
+in the descriptor index pattern, as in the paged-KV / MoE consumers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(src_idx_ref, dst_idx_ref, src_ref, dst_in_ref, dst_ref):
+    """Body: move one row-block. Inactive descriptors (-1) write nothing.
+
+    dst_in_ref is the aliased destination pool (untouched rows keep their
+    contents through the input/output alias); it is not read here.
+    """
+    del dst_in_ref
+    i = pl.program_id(0)
+    active = (src_idx_ref[i] >= 0) & (dst_idx_ref[i] >= 0)
+
+    @pl.when(active)
+    def _():
+        dst_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def descriptor_copy(src_idx: jax.Array, dst_idx: jax.Array, src: jax.Array,
+                    dst: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """dst[dst_idx[i]] = src[src_idx[i]] for each descriptor i.
+
+    src/dst: (rows, unit) row pools — `unit` should be a multiple of 128
+    lanes for full VREG utilization on TPU (asserted softly).
+    """
+    n = src_idx.shape[0]
+    unit = src.shape[1]
+
+    dst_map = lambda i, sidx, didx: (jnp.maximum(didx[i], 0), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, unit),
+                         lambda i, sidx, didx: (jnp.maximum(sidx[i], 0), 0)),
+            pl.BlockSpec((1, unit), dst_map),
+        ],
+        out_specs=pl.BlockSpec((1, unit), dst_map),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={3: 0},   # dst pool (after 2 scalars + src)
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32), src, dst)
+
+
+# ---------------------------------------------------------------------------
+# Chained variant: executes a linked list without pre-flattening, using the
+# pointer-doubled permutation from repro.core.chain.flatten_chain.
+# ---------------------------------------------------------------------------
+
+def chain_copy(descs, src, dst, *, head: int = 0,
+               interpret: bool = False) -> jax.Array:
+    """Execute a DescriptorArray chain of row moves on the row pools."""
+    from repro.core.chain import flatten_chain
+
+    perm, _ = flatten_chain(descs.nxt, head)
+    order = jnp.where(perm >= 0, perm, 0)
+    gathered_src = jnp.where(perm >= 0, descs.src[order], -1)
+    gathered_dst = jnp.where(perm >= 0, descs.dst[order], -1)
+    return descriptor_copy(gathered_src, gathered_dst, src, dst,
+                           interpret=interpret)

@@ -1,0 +1,122 @@
+"""Flash attention forward — Pallas TPU kernel with explicit VMEM tiling.
+
+Grid (batch*kv_heads*groups, q_blocks, kv_blocks): the innermost axis streams
+KV blocks HBM->VMEM while running-softmax state (m, l, acc) persists in VMEM
+scratch across that axis. Block shapes are MXU-aligned (q_block x head_dim
+and kv_block x head_dim tiles, head_dim expected 128-multiple-friendly).
+
+This is the TPU-target version of models.attention.blockwise_attention (the
+jnp oracle is kernels.ref.flash_attention_ref).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: Optional[int], q_block: int,
+                  kv_block: int, num_kv_blocks: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+    # Static-shape causal/window skip: only compute blocks that intersect.
+    run = True
+    if causal:
+        run = k_start <= q_start + q_block - 1
+
+    @pl.when(jnp.asarray(run))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)         # (q_block, d)
+        k = k_ref[0].astype(jnp.float32)         # (kv_block, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, S, KV, D) -> (B, S, H, D).
+
+    GQA is handled by folding groups into the leading grid axis so each
+    (kv_head, group) pair re-reads its kv head's blocks.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0
+    nq, nk = sq // q_block, sk // kv_block
+
+    # Layout: fold (b, kv_head, group) into one axis; q -> (BKG, S, D).
+    qf = q.reshape(b, sq, kvh, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * kvh * g, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d), g, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d), g, axis=0)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, num_kv_blocks=nk, scale=d ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh * g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh * g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, kvh, g, sq, d).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, sq, h, d)

@@ -1,0 +1,55 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the Pallas body
+executes in Python for correctness validation; on TPU they compile to Mosaic.
+Model code selects these via config, defaulting to the jnp reference path
+for AOT dry-run lowering (kernel FLOPs == reference FLOPs at the HLO level).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref  # noqa: F401  (re-exported oracles)
+from .descriptor_copy import chain_copy, descriptor_copy
+from .flash_attention import flash_attention
+from .moe_dispatch import moe_combine, moe_gather
+from .paged_attention import paged_attention
+from .prefetch_pipeline import prefetched_chain_copy
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def descriptor_copy_op(src_idx, dst_idx, src, dst):
+    return descriptor_copy(src_idx, dst_idx, src, dst, interpret=_interpret())
+
+
+def chain_copy_op(descs, src, dst, head: int = 0):
+    return chain_copy(descs, src, dst, head=head, interpret=_interpret())
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None,
+                       q_block=128, kv_block=128):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_block=q_block, kv_block=kv_block,
+                           interpret=_interpret())
+
+
+def paged_attention_op(q, k_pages, v_pages, block_tables, lengths):
+    return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                           interpret=_interpret())
+
+
+def moe_gather_op(token_idx, tokens):
+    return moe_gather(token_idx, tokens, interpret=_interpret())
+
+
+def moe_combine_op(inv_slot, inv_weight, expert_out):
+    return moe_combine(inv_slot, inv_weight, expert_out,
+                       interpret=_interpret())
+
+
+def prefetched_chain_copy_op(src_idx, dst_idx, src, dst, depth: int = 4):
+    return prefetched_chain_copy(src_idx, dst_idx, src, dst, depth=depth,
+                                 interpret=_interpret())

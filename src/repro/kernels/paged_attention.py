@@ -1,0 +1,106 @@
+"""Paged decode attention — descriptor-chain block tables, scalar-prefetched.
+
+Each sequence's KV cache is a chain of fixed-size pages (one page = one
+descriptor, §II-B); the flattened chain (block table) and sequence lengths
+are scalar-prefetch operands, so page addresses are resolved in SMEM ahead
+of the grid step that streams the page HBM->VMEM — descriptor prefetching as
+a first-class Pallas construct (DESIGN.md §2/§3).
+
+Grid (batch, max_pages): running-softmax state persists in VMEM scratch
+across the page axis; pages past ceil(len/page) are skipped via pl.when
+(fetch suppressed by clamping the index map to the last valid page).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page: int, kvh: int, g: int,
+                  d: int, max_pages: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    num_pages = (length + page - 1) // page
+    active = (p < num_pages) & (tables_ref[b, p] >= 0)
+
+    @pl.when(active)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(kvh, g, d)
+        k = k_ref[0].astype(jnp.float32)          # (page, KV, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.einsum("kgd,skd->kgs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        pos = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, (kvh, g, page), 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        pr = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + pr.sum(axis=2)
+        acc_ref[...] = (acc_ref[...] * corr[..., None]
+                        + jnp.einsum("kgs,skd->kgd", pr, v,
+                                     preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(p == max_pages - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(kvh * g, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret: bool = False):
+    """q: (B, H, D); {k,v}_pages: (P, page, KV, D);
+    block_tables: (B, max_pages) int32 (-1 pads); lengths: (B,)."""
+    b, h, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    g = h // kvh
+    max_pages = block_tables.shape[1]
+
+    def page_map(bb, p, tables, lengths_):
+        return (jnp.maximum(tables[bb, p], 0), 0, 0, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, page=page, kvh=kvh, g=g, d=d, max_pages=max_pages,
+        scale=d ** -0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bb, p, t, L: (bb, 0, 0)),
+            pl.BlockSpec((1, page, kvh, d), page_map),
+            pl.BlockSpec((1, page, kvh, d), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bb, p, t, L: (bb, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, g), jnp.float32),
+            pltpu.VMEM((kvh, g), jnp.float32),
+            pltpu.VMEM((kvh, g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def descriptor_copy_ref(src_idx, dst_idx, src, dst):
+    """Row gather/scatter: dst[dst_idx[i]] = src[src_idx[i]]; -1 skips."""
+    active = src_idx >= 0
+    rows = src[jnp.maximum(src_idx, 0)]
+    tgt = jnp.where(active & (dst_idx >= 0), dst_idx, dst.shape[0])
+    return dst.at[tgt].set(rows, mode="drop")
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Naive softmax attention. q: (B,S,H,D); k,v: (B,S,KV,D)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * d ** -0.5
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Decode attention over a paged KV pool.
+
+    q: (B, H, D); {k,v}_pages: (P, page, KV, D);
+    block_tables: (B, max_pages) int32 page ids (-1 pads);
+    lengths: (B,) tokens in cache. Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    _, page, kvh, _ = k_pages.shape
+    g = h // kvh
+    max_pages = block_tables.shape[1]
+
+    safe = jnp.maximum(block_tables, 0)
+    k = k_pages[safe]          # (B, max_pages, page, KV, D)
+    v = v_pages[safe]
+    k = k.reshape(b, max_pages * page, kvh, d)
+    v = v.reshape(b, max_pages * page, kvh, d)
+    pos = jnp.arange(max_pages * page)[None, :]
+    valid = (pos < lengths[:, None]) & jnp.repeat(
+        block_tables >= 0, page, axis=1)
+    qg = q.reshape(b, kvh, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def moe_gather_ref(token_idx, tokens):
+    """Dispatch gather: (E*C,) slots from (T, d) tokens; -1 -> zeros."""
+    rows = tokens[jnp.maximum(token_idx, 0)]
+    return jnp.where((token_idx >= 0)[:, None], rows, 0).astype(tokens.dtype)
+
+
+def moe_combine_ref(inv_slot, inv_weight, expert_out):
+    """Combine: out[t] = sum_j w[t,j] * expert_out[inv_slot[t,j]]; -1 skips."""
+    rows = expert_out[jnp.maximum(inv_slot, 0)]          # (T, k, d)
+    w = jnp.where(inv_slot >= 0, inv_weight, 0.0)
+    return jnp.einsum("tk,tkd->td", w.astype(jnp.float32),
+                      rows.astype(jnp.float32)).astype(expert_out.dtype)

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks device count on first init.
+
+"""Multi-pod dry-run (deliverable e): AOT lower+compile every
+(arch x shape x mesh) cell on placeholder devices; record memory analysis,
+cost analysis and the collective schedule for the roofline (deliverable g).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --subprocess
+        # one subprocess per cell (isolates compile memory), resumable:
+        # existing JSONs under experiments/dryrun/ are skipped.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.distributed import shardlib
+from repro.distributed.sharding import (
+    activation_rules,
+    decode_state_specs,
+    param_specs,
+    to_named,
+    train_batch_specs,
+    train_state_specs,
+)
+from repro.launch.inputs import (
+    decode_state_shapes,
+    prefill_input_specs,
+    train_input_specs,
+    train_state_specs_shapes,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as ra
+
+OUT_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "experiments", "dryrun"))
+
+
+def _out_path(mesh_name, arch, shape_name):
+    d = os.path.abspath(os.path.join(OUT_DIR, mesh_name))
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape_name}.json")
+
+
+def _with_periods(cfg, n: int):
+    """Reduced-depth clone: first_k_dense prefix + n periods (same widths)."""
+    import dataclasses
+    kw = dict(
+        num_layers=cfg.first_k_dense + n * len(cfg.block_pattern),
+        attention_impl="proj_only",
+        scan_periods=False,
+    )
+    if cfg.is_encdec:
+        enc_per_period = cfg.encoder_layers // (
+            (cfg.num_layers - cfg.first_k_dense) // len(cfg.block_pattern))
+        kw["encoder_layers"] = max(1, n * enc_per_period)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _lower_for(cfg, shape, mesh):
+    if shape.kind == "train":
+        return _lower_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return _lower_prefill(cfg, shape, mesh)
+    return _lower_decode(cfg, shape, mesh)
+
+
+def _measure(cfg, shape, mesh) -> dict:
+    """Lower+compile one module; return flops/bytes/collectives (per chip)."""
+    lowered = _lower_for(cfg, shape, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             force: bool = False) -> dict:
+    path = _out_path(mesh_name, arch, shape_name)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    model_opts = {}
+    for kv in filter(None, os.environ.get("REPRO_MODEL_OPTS", "").split(",")):
+        k, v = kv.split("=")
+        model_opts[k] = v
+    if model_opts:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **model_opts)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "skipped", "reason": why}
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    multi_pod = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    shardlib.set_mesh(mesh)
+    shardlib.set_rules(activation_rules(mesh))
+    t0 = time.time()
+
+    try:
+        with mesh:
+            # (1) Full-depth compile: memory analysis + the "it fits" proof.
+            lowered = _lower_for(cfg, shape, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            print(mem)    # proves it fits (bytes per device)
+            print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+
+            # (2) Loop-aware totals: P=1 / P=2 extrapolation (see §Roofline).
+            periods = (cfg.num_layers - cfg.first_k_dense) \
+                // len(cfg.block_pattern)
+            decode_kind = shape.kind == "decode"
+            import dataclasses as dc
+            cfg1 = _with_periods(cfg, 1)
+            cfg2 = _with_periods(cfg, 2)
+            if decode_kind:   # decode path has no inner loops: measure real core
+                cfg1 = dc.replace(cfg1, attention_impl="blockwise")
+                cfg2 = dc.replace(cfg2, attention_impl="blockwise")
+            m1 = _measure(cfg1, shape, mesh)
+            m2 = _measure(cfg2, shape, mesh)
+
+        ext = lambda k: ra.extrapolate(m1[k], m2[k], periods)
+        flops_pc = ext("flops")
+        bytes_pc = ext("bytes")
+        coll_pc = {k: ra.extrapolate(m1["collectives"][k],
+                                     m2["collectives"][k], periods)
+                   for k in m1["collectives"]}
+        if not decode_kind:
+            core_f, core_b = ra.core_totals(cfg, shape)   # global -> per chip
+            flops_pc += core_f / chips
+            bytes_pc += core_b / chips
+
+        peak = getattr(mem, "temp_size_in_bytes", 0) + \
+            getattr(mem, "argument_size_in_bytes", 0) + \
+            getattr(mem, "output_size_in_bytes", 0)
+        roof = ra.Roofline(
+            arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+            hlo_flops_per_chip=flops_pc, hlo_bytes_per_chip=bytes_pc,
+            wire_bytes_per_chip=float(sum(coll_pc.values())),
+            collectives=coll_pc,
+            model_flops=ra.model_flops(cfg, shape),
+            bytes_per_chip_hbm=float(getattr(mem, "temp_size_in_bytes", 0)),
+        )
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "chips": chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": {
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "peak_per_device_bytes": peak,
+            },
+            "raw_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                                  "bytes": float(cost.get("bytes accessed",
+                                                          0.0))},
+            "extrapolation": {"p1": m1, "p2": m2, "periods": periods},
+            "roofline": roof.to_dict(),
+        }
+    except Exception as e:  # noqa: BLE001 — recorded, re-raised by --all
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    finally:
+        shardlib.clear_mesh()
+
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def _train_config():
+    """TrainConfig for lowering; perf variants via REPRO_TRAIN_OPTS
+    (comma-separated k=v, e.g. 'cast_params_bf16=1,microbatches=2')."""
+    from repro.train import TrainConfig
+    opts = {}
+    for kv in filter(None, os.environ.get("REPRO_TRAIN_OPTS", "").split(",")):
+        k, v = kv.split("=")
+        opts[k] = (v == "1") if v in ("0", "1") else v
+    return TrainConfig(**opts)
+
+
+def _lower_train(cfg, shape, mesh):
+    from repro.train import train_step
+    tcfg = _train_config()
+    state_shapes = train_state_specs_shapes(cfg, tcfg)
+    batch_shapes = train_input_specs(cfg, shape)
+    state_sh = to_named(train_state_specs(cfg, mesh, state_shapes), mesh)
+    batch_sh = to_named(
+        train_batch_specs(mesh, shape.global_batch, batch_shapes), mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    fn = lambda s, b: train_step(s, b, cfg, tcfg)
+    return jax.jit(
+        fn,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    ).lower(state_shapes, batch_shapes)
+
+
+def _lower_prefill(cfg, shape, mesh):
+    from repro.models.model import forward
+    batch_shapes = prefill_input_specs(cfg, shape)
+    batch_sh = to_named(
+        train_batch_specs(mesh, shape.global_batch, batch_shapes), mesh)
+    p_shapes, p_sh = _serving_params(cfg, mesh)
+
+    def prefill_step(params, batch):
+        logits, _, _, _ = forward(params, batch, cfg)
+        return logits
+
+    return jax.jit(prefill_step,
+                   in_shardings=(p_sh, batch_sh)).lower(p_shapes, batch_shapes)
+
+
+def _serve_opts():
+    opts = {}
+    for kv in filter(None, os.environ.get("REPRO_SERVE_OPTS", "").split(",")):
+        k, v = kv.split("=")
+        opts[k] = v == "1"
+    return opts
+
+
+def _serving_params(cfg, mesh):
+    """(shapes, shardings) for decode/prefill params, honoring
+    REPRO_SERVE_OPTS=tp_only=1,bf16=1 perf variants."""
+    from repro.models import param_shapes
+    from repro.distributed.sharding import serving_param_specs
+    opts = _serve_opts()
+    p_shapes = param_shapes(cfg)
+    if opts.get("bf16"):
+        p_shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, cfg.cdtype)
+            if l.dtype == jnp.float32 and len(l.shape) >= 2 else l, p_shapes)
+    spec_fn = serving_param_specs if opts.get("tp_only") else param_specs
+    return p_shapes, to_named(spec_fn(cfg, mesh, p_shapes), mesh)
+
+
+def _lower_decode(cfg, shape, mesh):
+    from repro.models import decode_step
+    from repro.distributed.sharding import batch_axis
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state_shapes, token_shapes = decode_state_shapes(cfg, shape)
+    p_shapes, p_sh = _serving_params(cfg, mesh)
+    kv_seq = "model" if _serve_opts().get("kv_seq_shard") else None
+    s_sh = to_named(
+        decode_state_specs(cfg, mesh, state_shapes, shape.global_batch,
+                           kv_seq_axis=kv_seq), mesh)
+    BA = batch_axis(mesh, shape.global_batch)
+    tok_sh = NamedSharding(mesh, P(BA))
+
+    def serve_step(params, tokens, state):
+        return decode_step(params, tokens, state, cfg)
+
+    return jax.jit(
+        serve_step,
+        in_shardings=(p_sh, tok_sh, s_sh),
+        out_shardings=(None, s_sh),
+        donate_argnums=(2,),
+    ).lower(p_shapes, token_shapes, state_shapes)
+
+
+def all_cells(mesh_names):
+    cells = []
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            for mesh_name in mesh_names:
+                cells.append((arch, shape_name, mesh_name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh subprocess (memory hygiene)")
+    args = ap.parse_args()
+
+    mesh_names = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = all_cells(mesh_names)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, m) for m in mesh_names]
+
+    failures = 0
+    for arch, shape_name, mesh_name in cells:
+        path = _out_path(mesh_name, arch, shape_name)
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                r = json.load(f)
+            print(f"[cached] {mesh_name:8s} {arch:22s} {shape_name:12s} "
+                  f"{r['status']}")
+            continue
+        if args.subprocess:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name, "--mesh", mesh_name]
+            if args.force:
+                cmd.append("--force")
+            env = dict(os.environ)
+            proc = subprocess.run(cmd, env=env, capture_output=True,
+                                  text=True)
+            status = "?"
+            if os.path.exists(path):
+                with open(path) as f:
+                    status = json.load(f)["status"]
+            print(f"[subproc] {mesh_name:8s} {arch:22s} {shape_name:12s} "
+                  f"{status} (rc={proc.returncode})")
+            if status != "ok" and status != "skipped":
+                failures += 1
+        else:
+            r = run_cell(arch, shape_name, mesh_name, force=args.force)
+            print(f"[run]    {mesh_name:8s} {arch:22s} {shape_name:12s} "
+                  f"{r['status']}"
+                  + (f" ({r.get('error','')[:120]})"
+                     if r["status"] == "error" else ""))
+            if r["status"] == "error":
+                failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

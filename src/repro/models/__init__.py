@@ -1,0 +1,10 @@
+"""Model zoo: unified transformer/SSM/MoE/hybrid stacks."""
+from .model import (  # noqa: F401
+    DecodeState,
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)

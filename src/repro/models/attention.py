@@ -1,0 +1,352 @@
+"""Attention: GQA/MHA with q/k-norm, partial RoPE, sliding windows, and MLA.
+
+Train/prefill use a blockwise (flash-style) O(block^2)-memory implementation
+in pure jnp — the Pallas kernel in :mod:`repro.kernels.flash_attention` is
+the TPU-target version of the same schedule. Decode uses a dense-view cache
+(B, S, KV, D) with per-slot position tags so full, sliding-window and
+ring-buffer caches share one masking rule; the paged pool + descriptor-chain
+view lives in :mod:`repro.serve.kv_cache` and lowers to
+:mod:`repro.kernels.paged_attention` on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import shard
+from .layers import apply_rope, dense_init, init_rms_norm, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dt = cfg.pdtype
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p = {
+            "q_down": dense_init(ks[0], (d, m.q_lora_rank), dt),
+            "q_norm": init_rms_norm(m.q_lora_rank, dt),
+            "q_up": dense_init(ks[1], (m.q_lora_rank, h, qk), dt),
+            "kv_down": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+            "kv_norm": init_rms_norm(m.kv_lora_rank, dt),
+            "kv_up": dense_init(ks[3], (m.kv_lora_rank, h,
+                                        m.qk_nope_head_dim + m.v_head_dim), dt),
+            "wo": dense_init(ks[4], (h, m.v_head_dim, d), dt, in_axis=0),
+        }
+        return p
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dt),
+        "wk": dense_init(ks[1], (d, kv, hd), dt),
+        "wv": dense_init(ks[2], (d, kv, hd), dt),
+        "wo": dense_init(ks[3], (h, hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((kv, hd), dt)
+        p["bv"] = jnp.zeros((kv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dt)
+        p["k_norm"] = init_rms_norm(hd, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — jnp reference schedule
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    """q_pos: (..., Sq), kv_pos: (..., Sk) -> (..., Sq, Sk) additive mask."""
+    ok = kv_pos[..., None, :] >= 0
+    if causal:
+        ok &= kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= q_pos[..., :, None] - kv_pos[..., None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def blockwise_attention(
+    q: jax.Array,              # (B, Sq, H, D)
+    k: jax.Array,              # (B, Sk, KV, D)
+    v: jax.Array,              # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    softcap: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Memory-efficient attention: outer scan over q blocks, inner over kv
+    blocks with running (max, sum, acc) — the flash schedule in pure jnp."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    dv = v.shape[-1]            # value head dim may differ (MLA)
+    g = h // kv
+    scale = d ** -0.5
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0
+    nq, nk = sq // q_block, sk // kv_block
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32), (b, sk))
+
+    qb = q.reshape(b, nq, q_block, kv, g, d)
+    kb = k.reshape(b, nk, kv_block, kv, d)
+    vb = v.reshape(b, nk, kv_block, kv, dv)
+    qpb = q_positions.reshape(b, nq, q_block)
+    kpb = kv_positions.reshape(b, nk, kv_block)
+
+    def q_step(qi):
+        qi_q = qb[:, qi]          # (B, qb, KV, G, D)
+        qi_pos = qpb[:, qi]       # (B, qb)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kk, vv, kpos = kb[:, ki], vb[:, ki], kpb[:, ki]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi_q, kk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            s = s + _mask(qi_pos, kpos, causal, window)[:, None, None, :, :]
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vv.dtype), vv,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_block, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, dv)
+
+    out = jax.lax.map(q_step, jnp.arange(nq))       # (nq, B, qb, H, Dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full-pass (train / prefill) attention layers
+# ---------------------------------------------------------------------------
+
+class KVCacheView(NamedTuple):
+    """Dense-view cache for one layer: position-tagged slots."""
+    k: jax.Array           # (B, S, KV, D) — MLA: (B, S, 1, lora+rope)
+    v: jax.Array           # (B, S, KV, D) — MLA: unused placeholder (B,0,..)
+    kv_pos: jax.Array      # (B, S) int32, -1 = empty
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    k = apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def attention(params, x, positions, cfg: ModelConfig, *,
+              kind: str = "attn", causal: bool = True,
+              return_cache: bool = False):
+    """Full-sequence attention. kind: 'attn' (full) or 'local' (windowed)."""
+    if cfg.mla is not None:
+        return _mla_attention(params, x, positions, cfg,
+                              return_cache=return_cache)
+    dt = cfg.cdtype
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    window = cfg.sliding_window if kind == "local" else None
+    if cfg.attention_impl == "proj_only":
+        # Dry-run accounting mode: projections kept, core replaced by a
+        # shape-correct passthrough (its cost is added analytically).
+        g = cfg.num_heads // cfg.num_kv_heads
+        out = jnp.repeat(v, g, axis=2)
+    else:
+        out = blockwise_attention(q, k, v, causal=causal, window=window,
+                                  q_positions=positions,
+                                  kv_positions=positions,
+                                  softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    y = shard(y, "batch", "seq", None)
+    if return_cache:
+        return y, KVCacheView(k, v, positions.astype(jnp.int32))
+    return y
+
+
+def _mla_attention(params, x, positions, cfg: ModelConfig, *,
+                   return_cache: bool = False):
+    """DeepSeek-V2 multi-head latent attention (training: expanded form)."""
+    m = cfg.mla
+    dt = cfg.cdtype
+    b, s, _ = x.shape
+    cq = jnp.einsum("bsd,dr->bsr", x, params["q_down"].astype(dt))
+    cq = rms_norm(cq, params["q_norm"]["scale"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, params["q_up"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"].astype(dt))
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        theta=cfg.rope_theta)  # (B,S,1,rope)
+
+    kv = jnp.einsum("bsr,rhe->bshe", c_kv, params["kv_up"].astype(dt))
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, cfg.num_heads,
+                                           m.qk_rope_head_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if cfg.attention_impl == "proj_only":
+        out = v  # dry-run accounting mode (core added analytically)
+    else:
+        out = blockwise_attention(q_full, k, v, causal=True,
+                                  q_positions=positions,
+                                  kv_positions=positions)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    y = shard(y, "batch", "seq", None)
+    if return_cache:
+        # MLA caches the *compressed* latents: (c_kv | k_rope) per position.
+        lat = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)[:, :, None, :]
+        empty_v = jnp.zeros((b, s, 1, 0), dt)
+        return y, KVCacheView(lat, empty_v, positions.astype(jnp.int32))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token) attention against a dense-view cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+               dtype=None) -> KVCacheView:
+    dtype = dtype or cfg.cdtype
+    if cfg.mla is not None:
+        m = cfg.mla
+        lat = m.kv_lora_rank + m.qk_rope_head_dim
+        return KVCacheView(
+            k=jnp.zeros((batch, max_len, 1, lat), dtype),
+            v=jnp.zeros((batch, max_len, 1, 0), dtype),
+            kv_pos=jnp.full((batch, max_len), -1, jnp.int32))
+    size = min(max_len, cfg.sliding_window) if (
+        kind == "local" and cfg.sliding_window) else max_len
+    return KVCacheView(
+        k=jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim_), dtype),
+        v=jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim_), dtype),
+        kv_pos=jnp.full((batch, size), -1, jnp.int32))
+
+
+def decode_attention(params, x, cache: KVCacheView, cur_pos, cfg: ModelConfig,
+                     *, kind: str = "attn") -> Tuple[jax.Array, KVCacheView]:
+    """One decode step. x: (B, 1, d_model); cur_pos: (B,) current position.
+
+    The cache is a position-tagged ring: slot = pos % cache_len, masking by
+    tag, so full caches, sliding windows and ring buffers share this code.
+    """
+    if cfg.mla is not None:
+        return _mla_decode(params, x, cache, cur_pos, cfg)
+    dt = cfg.cdtype
+    b = x.shape[0]
+    positions = cur_pos[:, None]
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    cache_len = cache.k.shape[1]
+    slot = (cur_pos % cache_len).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0])
+    v = cache.v.at[bidx, slot].set(v_new[:, 0])
+    kv_pos = cache.kv_pos.at[bidx, slot].set(cur_pos.astype(jnp.int32))
+
+    window = cfg.sliding_window if kind == "local" else None
+    s = jnp.einsum("bqkgd,bskd->bkgqs",
+                   q.reshape(b, 1, cfg.num_kv_heads,
+                             cfg.num_heads // cfg.num_kv_heads, cfg.head_dim_),
+                   k, preferred_element_type=jnp.float32) * cfg.head_dim_ ** -0.5
+    if cfg.attn_logit_softcap:
+        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    s = s + _mask(positions, kv_pos, True, window)[:, None, None, :, :]
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(dt), v)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.num_heads, cfg.head_dim_)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    return y, KVCacheView(k, v, kv_pos)
+
+
+def _mla_decode(params, x, cache: KVCacheView, cur_pos, cfg: ModelConfig):
+    """Absorbed MLA decode: attend in the compressed latent space.
+
+    Cache holds (c_kv | k_rope) of size kv_lora+rope per position — the MLA
+    memory win (DeepSeek-V2 §2.1): scores are computed by absorbing kv_up
+    into the query, values by attending over c_kv then projecting.
+    """
+    m = cfg.mla
+    dt = cfg.cdtype
+    b = x.shape[0]
+    positions = cur_pos[:, None]
+
+    cq = jnp.einsum("bsd,dr->bsr", x, params["q_down"].astype(dt))
+    cq = rms_norm(cq, params["q_norm"]["scale"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, params["q_up"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"].astype(dt))
+    c_kv_new, k_rope_new = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv_new = rms_norm(c_kv_new, params["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], positions,
+                            theta=cfg.rope_theta)[:, :, 0, :]
+    lat_new = jnp.concatenate([c_kv_new, k_rope_new], axis=-1)
+
+    cache_len = cache.k.shape[1]
+    slot = (cur_pos % cache_len).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    lat = cache.k.at[bidx, slot, 0].set(lat_new[:, 0])
+    kv_pos = cache.kv_pos.at[bidx, slot].set(cur_pos.astype(jnp.int32))
+    c_kv, k_rope = lat[:, :, 0, :m.kv_lora_rank], lat[:, :, 0, m.kv_lora_rank:]
+
+    # Absorb kv_up's key half into q: q_abs (B,1,H,r).
+    w_up_k = params["kv_up"].astype(dt)[:, :, :m.qk_nope_head_dim]
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, w_up_k)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_abs, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhe,bse->bhqs", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    s = s + _mask(positions, kv_pos, True, None)[:, None, :, :]
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    # Attend over latents, then expand with kv_up's value half.
+    lat_out = jnp.einsum("bhqs,bsr->bqhr", p.astype(dt), c_kv)
+    w_up_v = params["kv_up"].astype(dt)[:, :, m.qk_nope_head_dim:]
+    out = jnp.einsum("bqhr,rhe->bqhe", lat_out, w_up_v)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    return y, KVCacheView(lat, cache.v, kv_pos)

@@ -1,0 +1,144 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings. Pure functional, dict params."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(dim: int, dtype=jnp.float32):
+    # Stored as offset-from-one (gemma convention); rms_norm adds the 1.
+    return {"scale": jnp.zeros((dim,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (partial-dim capable)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rope_fraction: float, theta: float):
+    rot_dim = int(head_dim * rope_fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_freqs(head_dim, fraction, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params, x: jax.Array, act_fn: str = "silu",
+        dtype=jnp.bfloat16) -> jax.Array:
+    act = jax.nn.silu if act_fn == "silu" else jax.nn.gelu
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+    if "w_gate" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("d_ff",)))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": embed_init(k1, (vocab, d_model), dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, (d_model, vocab), dtype)
+    return p
+
+
+def embed(params, tokens: jax.Array, dtype) -> jax.Array:
+    out = params["embedding"].astype(dtype)[tokens]
+    return shard(out, "batch", "seq", None)
+
+
+def unembed(params, x: jax.Array, dtype) -> jax.Array:
+    if "unembed" in params:
+        w = params["unembed"].astype(dtype)
+    else:
+        w = params["embedding"].astype(dtype).T
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return shard(logits, *(("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None,
+                          z_weight: float = 1e-4):
+    """Token-mean CE with z-loss; logits (..., V) in any dtype -> fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    z = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(ce)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce_mean = (ce * mask).sum() / denom
+    z_mean = (z * mask).sum() / denom
+    return ce_mean + z_weight * z_mean, {"ce": ce_mean, "z_loss": z_mean}

@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Chunked SSD algorithm: within-chunk terms are attention-like einsums
+(parallel over chunks), the cross-chunk recurrence is a short ``lax.scan``
+over chunk states — giving O(S * Q) work with Q = chunk length instead of
+O(S^2), and an O(1)-state decode step.
+
+Layout: d_inner = expand * d_model channels split into H = d_inner/P heads of
+dim P; B/C projections have G groups of state size N shared across heads.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import shard
+from .layers import dense_init, rms_norm
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_channels) rolling conv inputs
+    state: jax.Array   # (B, H, N, P) SSD state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    # dt bias initialized so softplus(dt_bias) spans [dt_min, dt_max].
+    u = jax.random.uniform(ks[2], (n_heads,))
+    dt0 = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model,
+                                      2 * d_inner + 2 * s.n_groups * s.d_state
+                                      + n_heads), cfg.pdtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_ch), cfg.pdtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_inner,), cfg.pdtype)},
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model), cfg.pdtype),
+    }
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    dt_ = cfg.cdtype
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    # split points: z | xBC | dt
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + conv_ch]
+    dt = proj[..., d_inner + conv_ch:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev=None):
+    """Depthwise causal conv along seq. xbc: (B, S, C); prev: (B, K-1, C)."""
+    k = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([prev, xbc], axis=1)
+    out = sum(padded[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(k))
+    new_prev = padded[:, -(k - 1):, :] if k > 1 else prev
+    return jax.nn.silu(out + conv_b[None, None, :]), new_prev
+
+
+def mamba_layer(params, x: jax.Array, cfg: ModelConfig, *,
+                return_cache: bool = False):
+    """Full-sequence SSD pass. x: (B, S, d_model)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    g, n, p = s.n_groups, s.d_state, s.head_dim
+    b, seqlen, _ = x.shape
+    q = min(s.chunk, seqlen)
+    assert seqlen % q == 0, f"seq {seqlen} not divisible by chunk {q}"
+    nc = seqlen // q
+    dt_c = cfg.cdtype
+
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"].astype(dt_c),
+                                  params["conv_b"].astype(dt_c))
+    xc = xbc[..., :d_inner].reshape(b, nc, q, n_heads, p).astype(jnp.float32)
+    Bm = xbc[..., d_inner:d_inner + g * n].reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cm = xbc[..., d_inner + g * n:].reshape(b, nc, q, g, n).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])     # (B,S,H)
+    dt = dt.reshape(b, nc, q, n_heads)
+    A = -jnp.exp(params["A_log"])                                # (H,) negative
+    da = dt * A[None, None, None, :]                             # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # Heads per group mapping (G groups broadcast over H heads).
+    hpg = n_heads // g
+    Bh = jnp.repeat(Bm, hpg, axis=3)                             # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cm, hpg, axis=3)
+
+    # --- intra-chunk (attention-like) ---
+    idx = jnp.arange(q)
+    causal = idx[:, None] >= idx[None, :]
+    ld = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (B,nc,Qi,Qj,H)
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(ld), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    m = cb * L * dt[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # --- chunk states + cross-chunk recurrence ---
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dt                    # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bh, w, xc)   # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    h0 = jnp.zeros((b, n_heads, n, p), jnp.float32)
+    h_final, h_states = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_states = jnp.moveaxis(h_states, 0, 1)                      # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Ch, h_states) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter + params["D"][None, None, None, :, None]
+         * xc).reshape(b, seqlen, d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt_c), params["norm"]["scale"], cfg.norm_eps)
+    y = shard(y, "batch", "seq", "d_ff")
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_c))
+    if return_cache:
+        return out, MambaCache(conv=conv_tail, state=h_final.astype(jnp.float32))
+    return out
+
+
+def mamba_decode(params, x: jax.Array, cache: MambaCache,
+                 cfg: ModelConfig) -> Tuple[jax.Array, MambaCache]:
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    g, n, p = s.n_groups, s.d_state, s.head_dim
+    b = x.shape[0]
+    dt_c = cfg.cdtype
+
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"].astype(dt_c),
+                                  params["conv_b"].astype(dt_c),
+                                  prev=cache.conv.astype(dt_c))
+    xc = xbc[:, 0, :d_inner].reshape(b, n_heads, p).astype(jnp.float32)
+    Bm = xbc[:, 0, d_inner:d_inner + g * n].reshape(b, g, n).astype(jnp.float32)
+    Cm = xbc[:, 0, d_inner + g * n:].reshape(b, g, n).astype(jnp.float32)
+    hpg = n_heads // g
+    Bh = jnp.repeat(Bm, hpg, axis=1)                             # (B,H,N)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])           # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])                             # (B,H)
+
+    new_state = (cache.state * decay[..., None, None]
+                 + jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt, xc))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state) \
+        + params["D"][None, :, None] * xc
+    y = y.reshape(b, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt_c), params["norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_c))
+    return out, MambaCache(conv=conv_tail, state=new_state)

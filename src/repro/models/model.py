@@ -1,0 +1,173 @@
+"""Top-level model: embeddings -> stack(s) -> head; train / prefill / decode.
+
+Multimodal archs ([audio]/[vlm]) take *precomputed* frontend embeddings
+(`prefix_embeds` / encoder `frames`) per the assignment — the modality
+frontend is a stub; the backbone is exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import shard
+from .layers import (
+    embed,
+    init_embed,
+    init_rms_norm,
+    rms_norm,
+    softmax_cross_entropy,
+    unembed,
+)
+from .transformer import (
+    init_decode_caches,
+    init_stack,
+    stack_decode,
+    stack_forward,
+)
+
+
+class DecodeState(NamedTuple):
+    caches: Any
+    cur_pos: jax.Array      # (B,) int32 — next position to write
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": init_embed(ks[0], cfg.padded_vocab, cfg.d_model, cfg.pdtype,
+                            cfg.tie_embeddings),
+        "stack": init_stack(ks[1], cfg, cross_attn=cfg.is_encdec),
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.is_encdec:
+        p["encoder"] = init_stack(ks[2], cfg, encoder=True)
+        p["enc_norm"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> Dict:
+    """Shape-only init (no FLOPs/allocation) for AOT lowering."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _encode(params, batch, cfg: ModelConfig):
+    frames = batch["frames"].astype(cfg.cdtype)   # (B, S_enc, d) stub embeds
+    pos = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32),
+        frames.shape[:2])
+    h, _, _ = stack_forward(params["encoder"], frames, pos, cfg, encoder=True)
+    return rms_norm(h, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token embeddings, with optional multimodal prefix concatenation."""
+    x = embed(params["embed"], batch["tokens"], cfg.cdtype)
+    if cfg.prefix_len and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cfg.cdtype)   # (B, P, d)
+        x = jnp.concatenate([pre, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions
+
+
+def forward(params, batch, cfg: ModelConfig, *, return_caches: bool = False):
+    """Full forward: logits over the (prefix+)token sequence."""
+    memory = _encode(params, batch, cfg) if cfg.is_encdec else None
+    x, positions = _embed_inputs(params, batch, cfg)
+    x, aux, caches = stack_forward(params["stack"], x, positions, cfg,
+                                   memory=memory, return_caches=return_caches)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.prefix_len and "prefix_embeds" in batch:
+        x = x[:, batch["prefix_embeds"].shape[1]:]
+    logits = unembed(params["embed"], x, cfg.cdtype)
+    return logits, aux, caches, memory
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux, _, _ = forward(params, batch, cfg)
+    mask = batch.get("loss_mask")
+    loss, metrics = softmax_cross_entropy(logits, batch["labels"], mask)
+    total = loss + aux
+    metrics = dict(metrics, aux=aux, loss=total)
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int
+            ) -> Tuple[jax.Array, DecodeState]:
+    """Run the full prompt, build position-tagged decode caches.
+
+    Note: full-cache views from `stack_forward` are re-laid-out into the
+    (possibly ring-buffered) decode caches.
+    """
+    logits, _, caches, memory = forward(params, batch, cfg,
+                                        return_caches=True)
+    b, s = batch["tokens"].shape[0], batch["tokens"].shape[1]
+    if cfg.prefix_len and "prefix_embeds" in batch:
+        s = s + batch["prefix_embeds"].shape[1]
+    state = init_decode_caches(cfg, b, max_len, memory=memory,
+                               params=params["stack"])
+    state = _load_prefill_caches(state, caches, cfg, s, max_len)
+    cur = jnp.full((b,), s, jnp.int32)
+    return logits[:, -1], DecodeState(state, cur)
+
+
+def _load_prefill_caches(decode_caches, full_caches, cfg: ModelConfig,
+                         seq: int, max_len: int):
+    """Copy prefill KV/ssm caches into the decode layout (tagged ring)."""
+    def load(dst, src):
+        if src is None:
+            return dst
+        if hasattr(src, "kv_pos"):          # KVCacheView
+            cache_len = dst.k.shape[-3] if dst.k.ndim == 4 else dst.k.shape[-3]
+            # Write the last `cache_len` positions into ring slots.
+            take = min(seq, dst.k.shape[-3])
+            pos = jnp.arange(seq - take, seq, dtype=jnp.int32)
+            slots = pos % dst.k.shape[-3]
+            k = dst.k.at[..., slots, :, :].set(src.k[..., -take:, :, :])
+            v = dst.v
+            if dst.v.shape[-1]:
+                v = dst.v.at[..., slots, :, :].set(src.v[..., -take:, :, :])
+            kv_pos = dst.kv_pos.at[..., slots].set(
+                jnp.broadcast_to(pos, src.kv_pos[..., -take:].shape))
+            return type(src)(k, v, kv_pos)
+        return src                           # MambaCache: final state already
+
+    def load_tree(dst, src):
+        return jax.tree.map(load, dst, src,
+                            is_leaf=lambda x: hasattr(x, "kv_pos")
+                            or hasattr(x, "conv"))
+
+    out = dict(decode_caches)
+    out["prefix"] = [load_tree(d, s) for d, s in
+                     zip(decode_caches["prefix"], full_caches["prefix"])]
+    out["slots"] = tuple(
+        load_tree(d, s) for d, s in
+        zip(decode_caches["slots"], full_caches["slots"]))
+    return out
+
+
+def decode_step(params, tokens, state: DecodeState, cfg: ModelConfig
+                ) -> Tuple[jax.Array, DecodeState]:
+    """tokens: (B,) int32 -> (logits (B, V), new state)."""
+    x = embed(params["embed"], tokens[:, None], cfg.cdtype)   # (B,1,d)
+    x, caches = stack_decode(params["stack"], x, state.caches, state.cur_pos,
+                             cfg)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.cdtype)[:, 0]
+    return logits, DecodeState(caches, state.cur_pos + 1)

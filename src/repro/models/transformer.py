@@ -1,0 +1,318 @@
+"""Layer-stack assembly: heterogeneous block *periods* under ``lax.scan``.
+
+A model is ``first_k_dense`` unstacked prefix layers plus N identical
+*periods*; each period is the config's ``block_pattern`` (e.g. Gemma-3:
+5 local + 1 global; Jamba: 7 mamba + 1 attn with alternating MoE). Scanning
+over periods keeps the lowered HLO size independent of depth — critical for
+the 40-cell dry-run compile budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import (
+    KVCacheView,
+    attention,
+    decode_attention,
+    init_attention,
+    init_cache,
+)
+from .layers import dense_init, init_mlp, init_rms_norm, mlp, rms_norm
+from .mamba import MambaCache, init_mamba, mamba_decode, mamba_layer
+from .moe import init_moe, moe_ffn
+
+
+class CrossCache(NamedTuple):
+    k: jax.Array   # (B, S_enc, KV, D)
+    v: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, mixer: str, ffn: str,
+               cross_attn: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": init_rms_norm(cfg.d_model, cfg.pdtype),
+               "norm2": init_rms_norm(cfg.d_model, cfg.pdtype)}
+    if mixer in ("attn", "local"):
+        p["mixer"] = init_attention(ks[0], cfg)
+    else:
+        p["mixer"] = init_mamba(ks[1], cfg)
+    if ffn == "moe":
+        p["ffn"] = init_moe(ks[2], cfg)
+    elif ffn == "dense":
+        p["ffn"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.pdtype,
+                            gated=cfg.mlp_gated)
+    # ffn == "none" (e.g. pure Mamba-2): no FFN params, norm2 unused.
+    if cross_attn:
+        p["cross"] = init_attention(ks[4], cfg)
+        p["norm_c"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+    return p
+
+
+def block_forward(p, x, positions, cfg: ModelConfig, mixer: str, ffn: str,
+                  *, causal: bool = True, memory: Optional[jax.Array] = None,
+                  return_cache: bool = False):
+    """Pre-norm block. Returns (x, aux_loss, cache|None)."""
+    h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+    cache = None
+    if mixer in ("attn", "local"):
+        out = attention(p["mixer"], h, positions, cfg, kind=mixer,
+                        causal=causal, return_cache=return_cache)
+        if return_cache:
+            out, cache = out
+    else:
+        out = mamba_layer(p["mixer"], h, cfg, return_cache=return_cache)
+        if return_cache:
+            out, cache = out
+    x = x + out
+
+    if memory is not None and "cross" in p:
+        hc = rms_norm(x, p["norm_c"]["scale"], cfg.norm_eps)
+        # Cross-attention: q from decoder, kv from encoder memory, non-causal.
+        xattn = _cross_attention(p["cross"], hc, memory, cfg)
+        x = x + xattn
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "none":
+        return x, aux, cache
+    h2 = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+    if ffn == "moe":
+        y, aux, _ = moe_ffn(p["ffn"], h2, cfg, cfg.act_fn)
+    else:
+        y = mlp(p["ffn"], h2, cfg.act_fn, cfg.cdtype)
+    return x + y, aux, cache
+
+
+def _cross_attention(p, x, memory, cfg: ModelConfig,
+                     kv: Optional[CrossCache] = None):
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    if kv is None:
+        k = jnp.einsum("bsd,dke->bske", memory, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dke->bske", memory, p["wv"].astype(dt))
+    else:
+        k, v = kv.k, kv.v
+    g = cfg.num_heads // cfg.num_kv_heads
+    b, s, h, d = q.shape
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.reshape(b, s, cfg.num_kv_heads, g, d), k,
+        preferred_element_type=jnp.float32) * d ** -0.5
+    pr = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", pr.astype(dt), v)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+
+
+def cross_kv(p, memory, cfg: ModelConfig) -> CrossCache:
+    dt = cfg.cdtype
+    return CrossCache(
+        k=jnp.einsum("bsd,dke->bske", memory, p["wk"].astype(dt)),
+        v=jnp.einsum("bsd,dke->bske", memory, p["wv"].astype(dt)))
+
+
+# ---------------------------------------------------------------------------
+# Stack: prefix layers + scanned periods
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg: ModelConfig, encoder: bool):
+    if encoder:
+        return (("attn", "dense"),)
+    return cfg.block_pattern
+
+
+def _n_periods(cfg: ModelConfig, encoder: bool) -> int:
+    if encoder:
+        return cfg.encoder_layers
+    n = cfg.num_layers - cfg.first_k_dense
+    assert n % len(cfg.block_pattern) == 0
+    return n // len(cfg.block_pattern)
+
+
+def init_stack(key, cfg: ModelConfig, *, encoder: bool = False,
+               cross_attn: bool = False):
+    pattern = _pattern(cfg, encoder)
+    periods = _n_periods(cfg, encoder)
+    keys = jax.random.split(key, periods * len(pattern) + cfg.first_k_dense)
+    prefix = []
+    if not encoder:
+        for i in range(cfg.first_k_dense):
+            mixer = pattern[0][0]
+            prefix.append(init_block(keys[i], cfg, mixer, "dense",
+                                     cross_attn=cross_attn))
+    # Stacked period params: leading axis = periods for each pattern slot.
+    slots = []
+    for j, (mixer, ffn) in enumerate(pattern):
+        per = [init_block(keys[cfg.first_k_dense + i * len(pattern) + j],
+                          cfg, mixer, ffn, cross_attn=cross_attn)
+               for i in range(periods)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return {"prefix": prefix, "slots": tuple(slots)}
+
+
+def stack_forward(params, x, positions, cfg: ModelConfig, *,
+                  encoder: bool = False, memory: Optional[jax.Array] = None,
+                  return_caches: bool = False):
+    """Full-sequence pass. Returns (x, aux_loss, caches).
+
+    caches: {"prefix": [...], "slots": tuple per slot, stacked over periods}
+    """
+    pattern = _pattern(cfg, encoder)
+    causal = not encoder
+
+    aux_total = jnp.zeros((), jnp.float32)
+    prefix_caches = []
+    for p, (mixer, _) in zip(params["prefix"],
+                             [pattern[0]] * len(params["prefix"])):
+        x, aux, c = block_forward(p, x, positions, cfg, mixer, "dense",
+                                  causal=causal, memory=memory,
+                                  return_cache=return_caches)
+        aux_total += aux
+        prefix_caches.append(c)
+
+    def period_fn(carry, slot_params):
+        x, aux_acc = carry
+        caches = []
+        for j, (mixer, ffn) in enumerate(pattern):
+            x, aux, c = block_forward(slot_params[j], x, positions, cfg,
+                                      mixer, ffn, causal=causal,
+                                      memory=memory,
+                                      return_cache=return_caches)
+            aux_acc = aux_acc + aux
+            caches.append(c)
+        return (x, aux_acc), tuple(caches)
+
+    if cfg.remat_policy != "none":
+        policy = (None if cfg.remat_policy == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        period_fn = jax.checkpoint(
+            period_fn, policy=policy, prevent_cse=False)
+
+    if cfg.scan_periods:
+        (x, aux_total), slot_caches = jax.lax.scan(
+            period_fn, (x, aux_total), params["slots"])
+    else:
+        # Flat unroll (dry-run cost accounting; XLA counts loop bodies once).
+        n = jax.tree.leaves(params["slots"])[0].shape[0]
+        ys = []
+        carry = (x, aux_total)
+        for i in range(n):
+            carry, y = period_fn(carry,
+                                 jax.tree.map(lambda p: p[i],
+                                              params["slots"]))
+            ys.append(y)
+        (x, aux_total) = carry
+        slot_caches = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) \
+            if return_caches else tuple(None for _ in pattern)
+    caches = {"prefix": prefix_caches, "slots": slot_caches} \
+        if return_caches else None
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       memory: Optional[jax.Array] = None,
+                       params=None, dtype=None):
+    """Allocate caches for the decoder stack (+ cross-KV for enc-dec)."""
+    pattern = _pattern(cfg, encoder=False)
+    periods = _n_periods(cfg, encoder=False)
+
+    def one(mixer):
+        if mixer in ("attn", "local"):
+            return init_cache(cfg, batch, max_len, mixer, dtype)
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        conv_ch = d_inner + 2 * s.n_groups * s.d_state
+        return MambaCache(
+            conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype or cfg.cdtype),
+            state=jnp.zeros((batch, d_inner // s.head_dim, s.d_state,
+                             s.head_dim), jnp.float32))
+
+    prefix = [one(pattern[0][0]) for _ in range(cfg.first_k_dense)]
+    slots = tuple(
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (periods,) + x.shape), one(m))
+        for (m, _) in pattern)
+    caches = {"prefix": prefix, "slots": slots}
+    if memory is not None and params is not None:
+        xk = [cross_kv(p["cross"], memory, cfg) for p in params["prefix"]]
+        caches["cross_prefix"] = xk
+        caches["cross_slots"] = tuple(
+            jax.vmap(lambda sp: cross_kv(sp["cross"], memory, cfg))(
+                params["slots"][j])
+            for j in range(len(pattern)))
+    return caches
+
+
+def stack_decode(params, x, caches, cur_pos, cfg: ModelConfig):
+    """One-token decode through the stack. x: (B, 1, d). Returns (x, caches')."""
+    pattern = _pattern(cfg, encoder=False)
+
+    def block_step(p, x, cache, mixer, ffn, cross=None):
+        h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+        if mixer in ("attn", "local"):
+            out, cache = decode_attention(p["mixer"], h, cache, cur_pos, cfg,
+                                          kind=mixer)
+        else:
+            out, cache = mamba_decode(p["mixer"], h, cache, cfg)
+        x = x + out
+        if cross is not None:
+            hc = rms_norm(x, p["norm_c"]["scale"], cfg.norm_eps)
+            x = x + _cross_attention(p["cross"], hc, None, cfg, kv=cross)
+        if ffn == "none":
+            return x, cache
+        h2 = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+        if ffn == "moe":
+            y, _, _ = moe_ffn(p["ffn"], h2, cfg, cfg.act_fn)
+        else:
+            y = mlp(p["ffn"], h2, cfg.act_fn, cfg.cdtype)
+        return x + y, cache
+
+    new_prefix = []
+    for i, p in enumerate(params["prefix"]):
+        cross = caches.get("cross_prefix", [None] * 99)[i] \
+            if "cross_prefix" in caches else None
+        x, c = block_step(p, x, caches["prefix"][i], pattern[0][0], "dense",
+                          cross)
+        new_prefix.append(c)
+
+    has_cross = "cross_slots" in caches
+
+    def period_fn(x, xs):
+        slot_params, slot_caches, cross_caches = xs
+        new_caches = []
+        for j, (mixer, ffn) in enumerate(pattern):
+            cross = cross_caches[j] if has_cross else None
+            x, c = block_step(slot_params[j], x, slot_caches[j], mixer, ffn,
+                              cross)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    cross_xs = caches.get("cross_slots",
+                          tuple(None for _ in pattern)) if has_cross else \
+        tuple(jnp.zeros((_n_periods(cfg, False), 0)) for _ in pattern)
+    if cfg.scan_periods:
+        x, new_slots = jax.lax.scan(
+            period_fn, x, (params["slots"], caches["slots"], cross_xs))
+    else:
+        n = jax.tree.leaves(params["slots"])[0].shape[0]
+        ys = []
+        for i in range(n):
+            x, y = period_fn(x, jax.tree.map(
+                lambda p: p[i], (params["slots"], caches["slots"], cross_xs)))
+            ys.append(y)
+        new_slots = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    out = {"prefix": new_prefix, "slots": new_slots}
+    if has_cross:
+        out["cross_prefix"] = caches["cross_prefix"]
+        out["cross_slots"] = caches["cross_slots"]
+    return x, out

@@ -1,0 +1,15 @@
+"""Optimizers, schedules, gradient compression."""
+from .optimizer import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    apply,
+    global_norm,
+    init,
+    learning_rate,
+)
+from .compress import (  # noqa: F401
+    compress_allreduce_leaf,
+    compressed_psum_tree,
+    compression_ratio,
+    init_residuals,
+)

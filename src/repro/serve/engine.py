@@ -1,0 +1,182 @@
+"""Continuous-batching serving engine.
+
+Fixed-capacity slot model: every engine step decodes one token for each
+occupied slot (prompt tokens are teacher-forced through the same path —
+"prefill-as-decode"), new requests are admitted into free slots between
+steps, and completions are signalled by the paper's writeback convention:
+each request owns a descriptor whose first-8-bytes all-ones flag the
+scheduler polls (§II-D; no interrupts on TPU — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import descriptor as D
+from repro.models import DecodeState, decode_step
+from repro.models.transformer import init_decode_caches
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    prompt_cursor: int = 0
+
+    @property
+    def busy(self) -> bool:
+        return self.request is not None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, capacity: int = 4,
+                 max_len: int = 128, greedy: bool = True):
+        self.params, self.cfg = params, cfg
+        self.capacity, self.max_len = capacity, max_len
+        self.greedy = greedy
+        self.queue: deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(capacity)]
+        self.completed: Dict[int, Request] = {}
+        # Completion table: one descriptor per request; writeback on finish.
+        self._completion = D.pack([0] * 0, [], [], [], [])
+        self._completion_rows: Dict[int, int] = {}
+        caches = init_decode_caches(cfg, capacity, max_len)
+        self.state = DecodeState(
+            caches, jnp.zeros((capacity,), jnp.int32))
+        self._step_fn = jax.jit(
+            lambda p, t, s: decode_step(p, t, s, cfg))
+        self.steps = 0
+
+    # -- API -------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        row = len(self._completion)
+        table = D.pack([req.max_new_tokens], [D.CONFIG_IRQ_ENABLE],
+                       [D.END_OF_CHAIN], [req.uid], [0])
+        self._completion = np.concatenate([self._completion, table]) \
+            if len(self._completion) else table
+        self._completion_rows[req.uid] = row
+        self.queue.append(req)
+
+    def poll_completed(self) -> List[Request]:
+        """Scheduler-side completion polling via descriptor writeback flags."""
+        done_rows = np.nonzero(D.is_done_packed(self._completion))[0] \
+            if len(self._completion) else []
+        out = []
+        for uid, row in list(self._completion_rows.items()):
+            if row in done_rows and uid in self.completed:
+                out.append(self.completed[uid])
+        return out
+
+    def run(self, max_steps: int = 1000) -> Dict[int, Request]:
+        while (self.queue or any(s.busy for s in self.slots)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.completed
+
+    # -- engine internals --------------------------------------------------------
+    def _reset_slot_caches(self, b: int) -> None:
+        def reset(leaf):
+            if not hasattr(leaf, "ndim"):
+                return leaf
+            return leaf
+        # Position tags are authoritative: clearing them invalidates the ring.
+        caches = self.state.caches
+
+        def clear(x, batch_axis):
+            idx = [slice(None)] * x.ndim
+            idx[batch_axis] = b
+            return x.at[tuple(idx)].set(-1 if x.dtype == jnp.int32 else 0)
+
+        def walk(tree):
+            import repro.models.attention as A
+            import repro.models.mamba as M
+            if isinstance(tree, A.KVCacheView):
+                stacked = tree.k.ndim == 5      # (periods, B, ...)
+                ax = 1 if stacked else 0
+                return A.KVCacheView(clear(tree.k, ax), clear(tree.v, ax),
+                                     clear(tree.kv_pos, ax))
+            if isinstance(tree, M.MambaCache):
+                stacked = tree.state.ndim == 5
+                ax = 1 if stacked else 0
+                return M.MambaCache(clear(tree.conv, ax),
+                                    clear(tree.state, ax))
+            if isinstance(tree, dict):
+                return {k: walk(v) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                return type(tree)(walk(v) for v in tree)
+            return tree
+
+        new_caches = walk(caches)
+        cur = self.state.cur_pos.at[b].set(0)
+        self.state = DecodeState(new_caches, cur)
+
+    def _admit(self) -> None:
+        for b, slot in enumerate(self.slots):
+            if not slot.busy and self.queue:
+                slot.request = self.queue.popleft()
+                slot.prompt_cursor = 0
+                self._reset_slot_caches(b)
+
+    def step(self) -> None:
+        self._admit()
+        active = np.array([s.busy for s in self.slots])
+        if not active.any():
+            return
+        tokens = np.zeros((self.capacity,), np.int32)
+        for b, slot in enumerate(self.slots):
+            if not slot.busy:
+                continue
+            r = slot.request
+            if slot.prompt_cursor < len(r.prompt):
+                tokens[b] = r.prompt[slot.prompt_cursor]
+            else:
+                tokens[b] = r.output[-1] if r.output else 0
+
+        logits, new_state = self._step_fn(self.params,
+                                          jnp.asarray(tokens), self.state)
+        sampled = np.asarray(jnp.argmax(logits, axis=-1))
+
+        # Advance only active slots (inactive ring writes are invalidated on
+        # admit via tag reset).
+        cur = np.asarray(new_state.cur_pos)
+        cur = np.where(active, cur, np.asarray(self.state.cur_pos))
+        self.state = DecodeState(new_state.caches,
+                                 jnp.asarray(cur, jnp.int32))
+
+        for b, slot in enumerate(self.slots):
+            if not slot.busy:
+                continue
+            r = slot.request
+            if slot.prompt_cursor < len(r.prompt):
+                # Consumed one prompt token; the step that consumes the LAST
+                # prompt token emits the first generated token.
+                slot.prompt_cursor += 1
+                if slot.prompt_cursor < len(r.prompt):
+                    continue
+            tok = int(sampled[b])
+            r.output.append(tok)
+            finished = (len(r.output) >= r.max_new_tokens
+                        or (r.eos_id is not None and tok == r.eos_id)
+                        or int(cur[b]) >= self.max_len - 1)
+            if finished:
+                self.completed[r.uid] = r
+                # §II-D completion writeback: first 8 bytes -> all ones.
+                D.mark_done_packed(self._completion,
+                                   self._completion_rows[r.uid])
+                slot.request = None
+        self.steps += 1

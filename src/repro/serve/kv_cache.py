@@ -1,0 +1,135 @@
+"""Paged KV cache: a page pool + per-sequence descriptor chains (§II-B as a
+block table). One page = one descriptor: `src` = page id in the pool,
+`next` links the sequence's pages, end-of-chain = -1. The allocator owns
+placement, so chains are laid out sequentially when possible — making the
+hardware's sequential speculation hit by construction (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import from_pages
+from repro.core.descriptor import DescriptorArray
+from repro.core.prefetch import estimate_hit_rate
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Free-list page allocator with sequential-preference placement."""
+
+    num_pages: int
+
+    def __post_init__(self):
+        self._free = list(range(self.num_pages))
+        self._owned: Dict[int, List[int]] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, seq_id: int, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"need {n} pages, have {len(self._free)}")
+        # Sequential preference: take the longest run of consecutive ids so
+        # a hardware speculator prefetching page k+1 after page k would hit.
+        self._free.sort()
+        pages = self._free[:n]
+        self._free = self._free[n:]
+        self._owned.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def free(self, seq_id: int) -> None:
+        self._free.extend(self._owned.pop(seq_id, []))
+
+    def chain(self, seq_id: int, page_elems: int) -> DescriptorArray:
+        """The sequence's block table as a descriptor chain."""
+        return from_pages(self._owned.get(seq_id, []), page_elems)
+
+    def speculation_hit_rate(self, seq_id: int, page_bytes: int = 32) -> float:
+        pages = self._owned.get(seq_id, [])
+        addrs = np.asarray(pages, np.int64) * page_bytes
+        return estimate_hit_rate(addrs) if len(pages) > 1 else 1.0
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Single-layer paged pool, shared across sequences.
+
+    k_pages/v_pages: (num_pages, page, KV, D). Block tables are dense
+    (max_seqs, max_pages) int32 snapshots of the descriptor chains, i.e. the
+    flattened form the Pallas kernel consumes.
+    """
+
+    page: int
+    num_pages: int
+    max_seqs: int
+    max_pages_per_seq: int
+    kv_heads: int
+    head_dim: int
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        shape = (self.num_pages, self.page, self.kv_heads, self.head_dim)
+        self.k_pages = jnp.zeros(shape, self.dtype)
+        self.v_pages = jnp.zeros(shape, self.dtype)
+        self.tables = np.full((self.max_seqs, self.max_pages_per_seq), -1,
+                              np.int32)
+        self.lengths = np.zeros((self.max_seqs,), np.int32)
+        self.alloc = PageAllocator(self.num_pages)
+
+    # -- sequence lifecycle ---------------------------------------------------
+    def admit(self, slot: int) -> None:
+        self.evict(slot)
+        self.tables[slot] = -1
+        self.lengths[slot] = 0
+
+    def evict(self, slot: int) -> None:
+        self.alloc.free(slot)
+        self.tables[slot] = -1
+        self.lengths[slot] = 0
+
+    def append(self, slot: int, k: jax.Array, v: jax.Array) -> None:
+        """Append one token's KV (KV, D) to `slot`'s chain."""
+        pos = int(self.lengths[slot])
+        page_idx, offset = divmod(pos, self.page)
+        if page_idx >= self.max_pages_per_seq:
+            raise OutOfPages(f"sequence exceeds {self.max_pages_per_seq} pages")
+        if self.tables[slot, page_idx] < 0:
+            (page_id,) = self.alloc.alloc(slot, 1)
+            self.tables[slot, page_idx] = page_id
+        pid = int(self.tables[slot, page_idx])
+        self.k_pages = self.k_pages.at[pid, offset].set(k)
+        self.v_pages = self.v_pages.at[pid, offset].set(v)
+        self.lengths[slot] = pos + 1
+
+    # -- kernel-facing views ---------------------------------------------------
+    def kernel_args(self) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        return (self.k_pages, self.v_pages,
+                jnp.asarray(self.tables), jnp.asarray(self.lengths))
+
+    def chain(self, slot: int) -> DescriptorArray:
+        pages = [int(p) for p in self.tables[slot] if p >= 0]
+        return from_pages(pages, self.page * self.kv_heads * self.head_dim)
+
+    def dense_view(self, slot: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize the logical (len, KV, D) cache (host-side oracle)."""
+        ln = int(self.lengths[slot])
+        ks, vs = [], []
+        for i in range((ln + self.page - 1) // self.page):
+            pid = int(self.tables[slot, i])
+            ks.append(np.asarray(self.k_pages[pid]))
+            vs.append(np.asarray(self.v_pages[pid]))
+        if not ks:
+            return (np.zeros((0, self.kv_heads, self.head_dim)),) * 2
+        k = np.concatenate(ks)[:ln]
+        v = np.concatenate(vs)[:ln]
+        return k, v

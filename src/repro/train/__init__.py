@@ -1,0 +1,10 @@
+"""Training substrate."""
+from .step import (  # noqa: F401
+    TrainConfig,
+    TrainState,
+    grads_and_metrics,
+    init_state,
+    jit_train_step,
+    train_step,
+)
+from .trainer import StragglerMonitor, Trainer, TrainerConfig  # noqa: F401

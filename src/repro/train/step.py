@@ -1,0 +1,111 @@
+"""Train step: microbatched grad accumulation, AdamW, optional cross-pod
+gradient compression. Pure function of (TrainState, batch) -> (TrainState,
+metrics); sharding is applied by the caller via in/out shardings + the
+logical-axis constraints inside the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro import optim
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: optim.AdamWState
+    residuals: Optional[Any]      # EF-compression residuals (or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: optim.AdamWConfig = optim.AdamWConfig()
+    microbatches: int = 1          # grad accumulation steps
+    compress_pod_axis: Optional[str] = None   # e.g. "pod" on multi-pod mesh
+    # Cast >=2-D fp32 params to compute dtype *before* they are consumed, so
+    # FSDP all-gathers move bf16 instead of fp32 (EXPERIMENTS.md §Perf-2).
+    cast_params_bf16: bool = False
+
+
+def init_state(params, tcfg: TrainConfig) -> TrainState:
+    residuals = None
+    if tcfg.compress_pod_axis:
+        residuals = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=optim.init(params),
+                      residuals=residuals)
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def _cast_params(params, dtype):
+    import jax.numpy as jnp_
+
+    def cast(p):
+        if hasattr(p, "dtype") and p.dtype == jnp_.float32 and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(cast, params)
+
+
+def grads_and_metrics(params, batch, cfg: ModelConfig, microbatches: int,
+                      cast_bf16: bool = False):
+    """Value-and-grad with lax.scan grad accumulation over microbatches."""
+    def fwd(p, b):
+        if cast_bf16:
+            p = _cast_params(p, cfg.cdtype)
+        return loss_fn(p, b, cfg)
+
+    grad_fn = jax.value_and_grad(fwd, has_aux=True)
+
+    if microbatches == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, dict(metrics, loss=loss)
+
+    mb = _split_microbatches(batch, microbatches)
+
+    def body(carry, mb_batch):
+        acc, loss_acc = carry
+        (loss, _), grads = grad_fn(params, mb_batch)
+        acc = jax.tree.map(jnp.add, acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), mb)
+    grads = jax.tree.map(lambda g: g / microbatches, gsum)
+    return grads, {"loss": loss_sum / microbatches}
+
+
+def train_step(state: TrainState, batch, cfg: ModelConfig,
+               tcfg: TrainConfig) -> Tuple[TrainState, dict]:
+    grads, metrics = grads_and_metrics(state.params, batch, cfg,
+                                       tcfg.microbatches,
+                                       cast_bf16=tcfg.cast_params_bf16)
+    residuals = state.residuals
+    if tcfg.compress_pod_axis and residuals is not None:
+        # Cross-pod error-feedback int8 allreduce. Inside pjit the psum over
+        # a mesh axis requires shard_map; the launcher wraps this step in one
+        # when compression is on. Here we expose the pure-tree transform.
+        grads, residuals = optim.compressed_psum_tree(
+            grads, residuals, tcfg.compress_pod_axis)
+    new_params, new_opt, opt_metrics = optim.apply(
+        tcfg.optimizer, state.params, grads, state.opt)
+    metrics = {**metrics, **opt_metrics}
+    return TrainState(new_params, new_opt, residuals), metrics
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, donate=True):
+    fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

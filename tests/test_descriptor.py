@@ -1,0 +1,73 @@
+"""Descriptor format: packing, round trips, completion semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import descriptor as D
+
+
+def test_packed_layout_is_256_bit():
+    assert D.PACKED_DTYPE.itemsize == 32
+    t = D.pack([64], [0], [D.END_OF_CHAIN], [0x1000], [0x2000])
+    raw = D.to_bytes(t)
+    assert len(raw) == 32
+    # Listing 1 field order: length, config, next, source, destination (LE).
+    assert int.from_bytes(raw[0:4], "little") == 64
+    assert int.from_bytes(raw[4:8], "little") == 0
+    assert int.from_bytes(raw[8:16], "little") == 0xFFFF_FFFF_FFFF_FFFF
+    assert int.from_bytes(raw[16:24], "little") == 0x1000
+    assert int.from_bytes(raw[24:32], "little") == 0x2000
+
+
+def test_end_of_chain_is_all_ones():
+    # §II-B: "carries all ones (equals to -1) in the next field".
+    assert D.END_OF_CHAIN == np.uint64(2**64 - 1)
+
+
+def test_length_over_4gib_rejected():
+    with pytest.raises(ValueError):
+        D.pack([2**32], [0], [0], [0], [0])
+
+
+def test_completion_writeback_first_8_bytes():
+    t = D.pack([64, 128], [0, 0], [32, D.END_OF_CHAIN], [0, 0], [0, 0])
+    D.mark_done_packed(t, 0)
+    raw = D.to_bytes(t)
+    assert raw[0:8] == b"\xff" * 8          # §II-D: first 8 B -> all ones
+    assert not D.is_done_packed(t)[1]
+    assert D.is_done_packed(t)[0]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    elem_bytes=st.sampled_from([1, 2, 4, 8]),
+    data=st.data(),
+)
+def test_soa_packed_roundtrip(n, elem_bytes, data):
+    src = data.draw(st.lists(st.integers(0, 2**20), min_size=n, max_size=n))
+    dst = data.draw(st.lists(st.integers(0, 2**20), min_size=n, max_size=n))
+    ln = data.draw(st.lists(st.integers(0, 2**16), min_size=n, max_size=n))
+    d = D.DescriptorArray.create(src, dst, ln)
+    packed = D.to_packed(d, elem_bytes=elem_bytes, src_base=0x1000,
+                         dst_base=0x8000, table_base=0x100)
+    back = D.from_packed(packed, elem_bytes=elem_bytes, src_base=0x1000,
+                         dst_base=0x8000, table_base=0x100)
+    np.testing.assert_array_equal(np.asarray(back.src), np.asarray(d.src))
+    np.testing.assert_array_equal(np.asarray(back.dst), np.asarray(d.dst))
+    np.testing.assert_array_equal(np.asarray(back.length), np.asarray(d.length))
+    np.testing.assert_array_equal(np.asarray(back.nxt), np.asarray(d.nxt))
+
+
+def test_roundtrip_preserves_done_flags():
+    d = D.DescriptorArray.create([0, 8], [16, 24], [8, 8])
+    d = d.mark_done(0)
+    packed = D.to_packed(d)
+    assert D.is_done_packed(packed)[0] and not D.is_done_packed(packed)[1]
+    back = D.from_packed(packed)
+    assert int(back.done[0]) == 1 and int(back.done[1]) == 0
+
+
+def test_default_chain_is_sequential():
+    d = D.DescriptorArray.create([0, 1, 2], [0, 1, 2], [1, 1, 1])
+    np.testing.assert_array_equal(np.asarray(d.nxt), [1, 2, -1])

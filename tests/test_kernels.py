@@ -1,0 +1,224 @@
+"""Pallas kernels vs ref.py oracles — shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.descriptor import DescriptorArray
+from repro.kernels import ref
+from repro.kernels.descriptor_copy import chain_copy, descriptor_copy
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_dispatch import moe_combine, moe_gather
+from repro.kernels.paged_attention import paged_attention
+
+I = dict(interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# descriptor_copy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("unit", [128, 256])
+def test_descriptor_copy_shapes_dtypes(dtype, unit):
+    rng = np.random.default_rng(0)
+    rows = 32
+    src = jnp.asarray(rng.integers(-5, 5, (rows, unit))).astype(dtype)
+    dst = jnp.zeros((rows, unit), dtype)
+    sidx = jnp.asarray(rng.permutation(rows), jnp.int32)
+    didx = jnp.arange(rows, dtype=jnp.int32)
+    got = descriptor_copy(sidx, didx, src, dst, **I)
+    want = ref.descriptor_copy_ref(sidx, didx, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_descriptor_copy_skips_inactive():
+    src = jnp.arange(4 * 128, dtype=jnp.float32).reshape(4, 128)
+    dst = jnp.full((4, 128), -1.0)
+    sidx = jnp.array([2, -1, 0, -1], jnp.int32)
+    didx = jnp.array([0, 1, 3, 2], jnp.int32)
+    got = descriptor_copy(sidx, didx, src, dst, **I)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(src[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(src[0]))
+    assert np.all(np.asarray(got[1]) == -1) and np.all(np.asarray(got[2]) == -1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 24))
+def test_chain_copy_matches_host_walk(seed, n):
+    """Chained kernel == serial host walk on random permutated chains."""
+    from repro.core.engine import execute_blocked_2d
+
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    nxt = np.full(n, -1, np.int64)
+    for a, b in zip(perm[:-1], perm[1:]):
+        nxt[a] = b
+    d = DescriptorArray.create(rng.integers(0, n, n), rng.permutation(n),
+                               np.ones(n), nxt)
+    src = jnp.asarray(rng.standard_normal((n, 128)), jnp.float32)
+    dst = jnp.zeros((n, 128), jnp.float32)
+    got = chain_copy(d, src, dst, head=int(perm[0]), **I)
+    want, _ = execute_blocked_2d(d, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(dtype, tol, h, kv, causal):
+    key = jax.random.PRNGKey(0)
+    b, s, d = 2, 256, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, q_block=128, kv_block=128, **I)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_sliding_window():
+    key = jax.random.PRNGKey(1)
+    b, s, h, d = 1, 256, 2, 128
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, d))
+    got = flash_attention(q, k, v, causal=True, window=64,
+                          q_block=64, kv_block=64, **I)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(64, 128), (128, 64), (256, 256)])
+def test_flash_attention_block_shape_sweep(blocks):
+    qb, kb = blocks
+    key = jax.random.PRNGKey(4)
+    b, s, h, d = 1, 256, 2, 128
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(key, (b, s, h, d))
+    v = jax.random.normal(key, (b, s, h, d))
+    got = flash_attention(q, k, v, q_block=qb, kv_block=kb, **I)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("h,kv", [(4, 4), (8, 2)])
+def test_paged_attention_vs_ref(dtype, tol, h, kv):
+    key = jax.random.PRNGKey(0)
+    b, d, page, pool, maxp = 3, 128, 16, 24, 4
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kp = jax.random.normal(ks[1], (pool, page, kv, d), dtype)
+    vp = jax.random.normal(ks[2], (pool, page, kv, d), dtype)
+    rng = np.random.default_rng(0)
+    # Distinct pages per sequence; ragged lengths (last page partial).
+    tables = rng.choice(pool, size=(b, maxp), replace=False)
+    lengths = np.array([maxp * page, 2 * page + 5, 7])
+    tables = np.where(np.arange(maxp)[None, :] * page
+                      < lengths[:, None], tables, -1)
+    got = paged_attention(q, kp, vp, jnp.asarray(tables, jnp.int32),
+                          jnp.asarray(lengths, jnp.int32), **I)
+    want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(tables, jnp.int32),
+                                   jnp.asarray(lengths, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_matches_dense_decode():
+    """Paged over a descriptor-chain layout == dense attention on the
+    logically contiguous cache (the serving-engine invariant)."""
+    key = jax.random.PRNGKey(7)
+    b, h, d, page = 2, 4, 128, 8
+    length = 3 * page
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    dense_k = jax.random.normal(ks[1], (b, length, h, d))
+    dense_v = jax.random.normal(ks[2], (b, length, h, d))
+    # Scatter the dense cache into a shuffled page pool.
+    pool = np.zeros((b * 3 + 2, page, h, d), np.float32)
+    vpool = np.zeros_like(pool)
+    rng = np.random.default_rng(1)
+    page_ids = rng.permutation(b * 3 + 2)[:b * 3].reshape(b, 3)
+    for i in range(b):
+        for j in range(3):
+            pool[page_ids[i, j]] = np.asarray(dense_k[i, j * page:(j + 1) * page])
+            vpool[page_ids[i, j]] = np.asarray(dense_v[i, j * page:(j + 1) * page])
+    lengths = jnp.full((b,), length, jnp.int32)
+    got = paged_attention(q, jnp.asarray(pool), jnp.asarray(vpool),
+                          jnp.asarray(page_ids, jnp.int32), lengths, **I)
+    want = ref.flash_attention_ref(q[:, None], dense_k, dense_v,
+                                   causal=False)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# moe dispatch / combine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gather_vs_ref(dtype):
+    rng = np.random.default_rng(0)
+    t, d, slots = 32, 128, 48
+    tokens = jnp.asarray(rng.standard_normal((t, d))).astype(dtype)
+    idx = jnp.asarray(rng.integers(-1, t, slots), jnp.int32)
+    got = moe_gather(idx, tokens, **I)
+    want = ref.moe_gather_ref(idx, tokens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_moe_combine_vs_ref(k):
+    rng = np.random.default_rng(1)
+    t, d, slots = 16, 128, 64
+    eo = jnp.asarray(rng.standard_normal((slots, d)), jnp.float32)
+    inv_slot = jnp.asarray(rng.integers(-1, slots, (t, k)), jnp.int32)
+    inv_w = jnp.asarray(rng.random((t, k)), jnp.float32)
+    got = moe_combine(inv_slot, inv_w, eo, **I)
+    want = ref.moe_combine_ref(inv_slot, inv_w, eo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_kernels_roundtrip_plan():
+    """Kernel dispatch+combine reproduces the model's jnp MoE combine path."""
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import capacity, moe_dispatch_plan
+
+    m = MoEConfig(num_experts=4, experts_per_token=2, expert_d_ff=8,
+                  capacity_factor=2.0)
+    t, d = 32, 128
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.normal(key, (t, d))
+    probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (t, 4)), -1)
+    cap = capacity(t, m)
+    plan = moe_dispatch_plan(probs, m, cap)
+
+    xe = moe_gather(plan.token_idx, tokens, **I)
+    np.testing.assert_allclose(np.asarray(xe),
+                               np.asarray(ref.moe_gather_ref(plan.token_idx,
+                                                             tokens)))
+    # Identity "experts": combine should reconstruct sum of top-k weights * x.
+    y = moe_combine(plan.inv_slot, plan.inv_weight, xe, **I)
+    want = ref.moe_combine_ref(plan.inv_slot, plan.inv_weight, xe)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # With norm_topk the weights sum to 1 -> y == tokens (no drops).
+    np.testing.assert_allclose(np.asarray(y), np.asarray(tokens),
+                               rtol=1e-4, atol=1e-4)

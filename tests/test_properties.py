@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import SimConfig, ideal_utilization, simulate
+from repro.kernels.prefetch_pipeline import prefetched_chain_copy
+
+
+# ---------------------------------------------------------------------------
+# Simulator invariants
+# ---------------------------------------------------------------------------
+
+sizes = st.sampled_from([32, 64, 128, 256, 512, 1024])
+latencies = st.sampled_from([1, 5, 13, 40, 100])
+
+
+@settings(max_examples=25, deadline=None)
+@given(size=sizes, latency=latencies)
+def test_utilization_never_exceeds_eq1(size, latency):
+    """Eq. 1 is a hard ceiling: payload can't beat n/(n+32) on a shared bus."""
+    for cfg in (SimConfig.base(), SimConfig.speculation(),
+                SimConfig.scaled()):
+        r = simulate(cfg, latency, size, num_transfers=600)
+        assert r.utilization <= ideal_utilization(size) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(size=sizes, latency=latencies)
+def test_speculation_dominates_base(size, latency):
+    """Perfect-hit speculation never loses to the serialized frontend."""
+    b = simulate(SimConfig.base(), latency, size, num_transfers=600)
+    s = simulate(SimConfig.speculation(), latency, size, num_transfers=600)
+    assert s.utilization >= b.utilization - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(size=sizes, latency=latencies)
+def test_scaled_dominates_speculation(size, latency):
+    s = simulate(SimConfig.speculation(), latency, size, num_transfers=600)
+    sc = simulate(SimConfig.scaled(), latency, size, num_transfers=600)
+    assert sc.utilization >= s.utilization - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(size=sizes)
+def test_utilization_monotone_in_latency(size):
+    for cfg in (SimConfig.base(), SimConfig.logicore_ip()):
+        us = [simulate(cfg, L, size, num_transfers=600).utilization
+              for L in (1, 13, 100)]
+        assert us[0] >= us[1] >= us[2]
+
+
+@settings(max_examples=15, deadline=None)
+@given(latency=latencies, seed=st.integers(0, 1000))
+def test_utilization_monotone_in_hit_rate(latency, seed):
+    us = [simulate(SimConfig.speculation(), latency, 64, hit_rate=h,
+                   num_transfers=800, seed=seed).utilization
+          for h in (0.0, 0.5, 1.0)]
+    assert us[0] <= us[1] + 0.02 and us[1] <= us[2] + 0.02
+
+
+@settings(max_examples=15, deadline=None)
+@given(size=sizes, latency=latencies)
+def test_larger_transfers_utilize_better(size, latency):
+    for cfg in (SimConfig.base(), SimConfig.speculation()):
+        a = simulate(cfg, latency, size, num_transfers=600).utilization
+        b = simulate(cfg, latency, size * 2, num_transfers=600).utilization
+        assert b >= a - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Prefetch-pipeline kernel == descriptor semantics at any depth
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data())
+def test_prefetch_pipeline_any_depth(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n = data.draw(st.integers(1, 24))
+    depth = data.draw(st.integers(2, 8))
+    rows, unit = n + 8, 128
+    src = jnp.asarray(rng.standard_normal((rows, unit)), jnp.float32)
+    dst = jnp.zeros((rows, unit), jnp.float32)
+    sidx = jnp.asarray(rng.choice(rows, n, replace=False), jnp.int32)
+    didx = jnp.asarray(rng.choice(rows, n, replace=False), jnp.int32)
+    out = prefetched_chain_copy(sidx, didx, src, dst, depth=depth,
+                                interpret=True)
+    want = np.zeros((rows, unit), np.float32)
+    want[np.asarray(didx)] = np.asarray(src)[np.asarray(sidx)]
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+# ---------------------------------------------------------------------------
+# Area model linearity (the paper's scalability claim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.integers(1, 64), s=st.integers(0, 64), k=st.integers(1, 4))
+def test_area_model_linear(d, s, k):
+    from repro.core.area_model import area_kge, AREA_BASE_KGE
+    a1 = area_kge(d, s) - AREA_BASE_KGE
+    ak = area_kge(k * d, k * s) - AREA_BASE_KGE
+    assert ak == pytest.approx(k * a1, rel=1e-9)

@@ -1,0 +1,93 @@
+"""Roofline machinery: HLO collective parsing, extrapolation, core model."""
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import analysis as ra
+
+HLO_SAMPLE = """
+HloModule test
+  %p = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p), replica_groups={}
+  %ag = bf16[32,256]{1,0} all-gather(%x), dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%p), dimensions={0}
+  %a2a = bf16[4,64]{1,0} all-to-all(%y), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%z)
+  %dot = f32[16,16]{1,0} dot(%p, %p)
+"""
+
+
+def test_collective_bytes_parser():
+    out = ra.collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 128 * 4 * 2.0        # ring factor 2x
+    assert out["all-gather"] == 32 * 256 * 2 * 1.0
+    assert out["reduce-scatter"] == 8 * 128 * 4
+    assert out["all-to-all"] == 4 * 64 * 2
+    assert out["collective-permute"] == 1024
+
+
+def test_collective_parser_ignores_compute_ops():
+    out = ra.collective_bytes("%d = f32[128,128] dot(%a, %b)\n")
+    assert sum(out.values()) == 0
+
+
+def test_extrapolation_affine():
+    assert ra.extrapolate(10.0, 14.0, 1) == 10.0
+    assert ra.extrapolate(10.0, 14.0, 2) == 14.0
+    assert ra.extrapolate(10.0, 14.0, 10) == 10.0 + 9 * 4.0
+
+
+def test_attention_core_local_band_is_cheaper():
+    cfg = get_config("gemma3-12b")
+    shape = SHAPES["prefill_32k"]
+    f_full, b_full = ra.attention_core(cfg, shape, "attn")
+    f_loc, b_loc = ra.attention_core(cfg, shape, "local")
+    assert f_loc < f_full / 10          # 1024+512 band vs 32768 full
+    assert b_loc < b_full
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen3-14b")
+    tr = ra.model_flops(cfg, SHAPES["train_4k"])
+    pf = ra.model_flops(cfg, SHAPES["prefill_32k"])
+    dc = ra.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.param_counts()["active"]
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert dc == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_params_much_smaller_than_total():
+    ds = get_config("deepseek-v2-236b").param_counts()
+    assert ds["active"] < 0.15 * ds["total"]   # ~21B active of 236B
+
+
+def test_roofline_terms_and_bottleneck():
+    r = ra.Roofline(arch="a", shape="s", mesh="m", chips=256,
+                    hlo_flops_per_chip=197e12, hlo_bytes_per_chip=819e9,
+                    wire_bytes_per_chip=200e9, collectives={},
+                    model_flops=197e12 * 256 * 0.5,
+                    bytes_per_chip_hbm=1e9)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(2.0)
+    assert r.bottleneck == "collective"
+    assert r.mfu == pytest.approx(0.25)   # 0.5 useful / 2s step
+
+
+def test_serving_param_specs_strip_fsdp():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import serving_param_specs, param_specs
+    from repro.models import param_shapes
+    import jax
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    cfg = get_config("qwen3-14b")
+    shapes = param_shapes(cfg)
+    specs = serving_param_specs(cfg, FakeMesh(), shapes)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for e in spec:
+            if e is None:
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            assert "data" not in axes and "pod" not in axes
