@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core.chain import from_gather
 from repro.core.engine import execute_blocked_2d
+from repro.core.simulator import simulate_multichannel
 from repro.kernels import descriptor_copy_op, moe_gather_op
 
 
@@ -50,4 +51,12 @@ def run(csv_rows: list) -> dict:
         us = _time(lambda: moe_gather_op(idx, src))
         csv_rows.append((f"kernel_moe_gather_{rows}x{unit}", us,
                          "interpret_mode=True"))
+
+    # Multi-channel cycle model: per-channel steady-state bus utilization.
+    for n_ch in (2, 4):
+        r = simulate_multichannel(n_ch, 13, 64, num_transfers=300)
+        per = "/".join(f"{c.utilization:.3f}" for c in r.channels)
+        csv_rows.append((f"sim_multichannel_{n_ch}ch_ddr3_64B", 0.0,
+                         f"agg={r.aggregate_utilization:.3f} per={per}"))
+        out[f"multichannel_{n_ch}ch"] = r.aggregate_utilization
     return out

@@ -1,0 +1,99 @@
+"""Runtime-layer benchmarks: launch latency, per-channel utilization,
+coalescer effectiveness. Emits the machine-readable trajectory consumed by
+``benchmarks/run.py`` (BENCH_runtime.json) so future PRs have a baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import from_segments
+from repro.core.simulator import simulate_multichannel
+from repro.runtime import coalesce, default_runtime
+
+
+def _bench_launch(n_desc: int = 256, repeats: int = 5) -> dict:
+    """Wall-clock submit cost per descriptor (the paper's launch latency)."""
+    rt = default_runtime(4, tier="serial", ring_capacity=n_desc + 1,
+                         max_len=64)
+    pool = 1 << 16
+    rng = np.random.default_rng(0)
+    rt.register_pool("src", jnp.zeros(pool, jnp.float32))
+    rt.register_pool("dst", jnp.zeros(pool, jnp.float32))
+    per_desc_us = []
+    for _ in range(repeats):
+        lens = rng.integers(1, 64, n_desc)
+        srcs = rng.integers(0, pool - 64, n_desc)
+        dsts = rng.integers(0, pool - 64, n_desc)
+        d = from_segments(srcs, dsts, lens)
+        t0 = time.perf_counter()
+        rt.submit(d, src_pool="src", dst_pool="dst")
+        per_desc_us.append((time.perf_counter() - t0) / n_desc * 1e6)
+        rt.drain_until_idle()
+    return {
+        "descriptors_per_submit": n_desc,
+        "launch_us_per_descriptor_best": float(min(per_desc_us)),
+        "launch_us_per_descriptor_mean": float(np.mean(per_desc_us)),
+        "runtime_stats": rt.stats(),
+    }
+
+
+def _bench_channels(mem_latency: int = 13, transfer_bytes: int = 64) -> dict:
+    out = {}
+    for n in (1, 2, 4, 8):
+        r = simulate_multichannel(n, mem_latency, transfer_bytes,
+                                  num_transfers=300)
+        out[f"{n}ch"] = {
+            "aggregate_utilization": r.aggregate_utilization,
+            "ideal": r.ideal,
+            "per_channel": {c.channel: c.utilization for c in r.channels},
+        }
+    return out
+
+
+def _bench_coalescer(pages: int = 256, page_elems: int = 16) -> dict:
+    """Contiguous-page workload: the planner should fuse page runs."""
+    # A block table whose pages mostly landed sequentially (the allocator's
+    # sequential preference), with a few fragmentation breaks.
+    rng = np.random.default_rng(1)
+    page_ids = []
+    next_id = 0
+    while len(page_ids) < pages:
+        run = int(rng.integers(4, 32))
+        page_ids.extend(range(next_id, next_id + run))
+        next_id += run + int(rng.integers(1, 4))   # fragmentation gap
+    page_ids = page_ids[:pages]
+    src = np.asarray(page_ids, np.int64) * page_elems
+    dst = np.arange(pages, dtype=np.int64) * page_elems
+    d = from_segments(src, dst, np.full(pages, page_elems, np.int64))
+    _, stats = coalesce(d, max_len=1 << 20)
+    return {
+        "n_in": stats.n_in,
+        "n_out": stats.n_out,
+        "merge_ratio": stats.merge_ratio,
+        "input_hit_rate": stats.input_hit_rate,
+        "output_hit_rate": stats.output_hit_rate,
+    }
+
+
+def run(csv_rows: list) -> dict:
+    launch = _bench_launch()
+    chans = _bench_channels()
+    coal = _bench_coalescer()
+    csv_rows.append(("runtime_launch_per_desc",
+                     launch["launch_us_per_descriptor_best"],
+                     f"mean={launch['launch_us_per_descriptor_mean']:.2f}us"))
+    for key, c in chans.items():
+        csv_rows.append((f"runtime_bus_util_{key}",
+                         0.0,
+                         f"agg={c['aggregate_utilization']:.3f}/"
+                         f"ideal={c['ideal']:.3f}"))
+    csv_rows.append(("runtime_coalesce", 0.0,
+                     f"merge_ratio={coal['merge_ratio']:.2f}"))
+    return {
+        "launch": launch,
+        "channels": chans,
+        "coalescer": coal,
+    }

@@ -1,11 +1,15 @@
 """Benchmark orchestrator. One module per paper table/figure; prints
-``name,us_per_call,derived`` CSV (deliverable d)."""
+``name,us_per_call,derived`` CSV (deliverable d) and writes the runtime
+perf trajectory to BENCH_runtime.json for cross-PR comparison."""
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 
 from benchmarks import (
     bench_engine,
+    bench_runtime,
     fig4_utilization,
     fig5_hitrate,
     roofline,
@@ -21,10 +25,15 @@ def main() -> None:
     table2_area.run(csv_rows)
     table4_latency.run(csv_rows)
     bench_engine.run(csv_rows)
+    runtime_metrics = bench_runtime.run(csv_rows)
     roofline.run(csv_rows)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")
+
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
+    out.write_text(json.dumps(runtime_metrics, indent=2, sort_keys=True))
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

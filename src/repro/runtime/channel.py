@@ -1,0 +1,227 @@
+"""Virtual DMA channels: one submission ring + one engine tier each.
+
+The paper's DMAC exposes a single frontend; related engines (iDMA,
+arXiv:2305.05240) generalize this to multiple frontends feeding a shared
+backend through explicit request queues. The runtime's :class:`Channel` is
+that frontend: callers submit descriptor chains into the channel's ring,
+and a later *drain* step executes them on the channel's engine tier:
+
+* ``serial``     — :func:`repro.core.engine.execute_serial`, chain-order
+                   preserving (irregular streams with overlapping writes);
+* ``blocked``    — :func:`repro.core.engine.execute_blocked`, vectorized
+                   uniform-unit streams over 1-D pools;
+* ``blocked_2d`` — :func:`repro.core.engine.execute_blocked_2d` row moves
+                   over row pools; with ``use_kernel=True`` the drain is
+                   driven through the Pallas descriptor-copy kernel
+                   (:func:`repro.kernels.descriptor_copy_op`);
+* ``control``    — no data movement: entries complete only via the owner's
+                   out-of-band §II-D writeback (serve-request markers).
+
+Arbitration between channels is round-robin or smooth weighted round-robin,
+mirroring the fair RR bus arbiter of the paper's §III-A testbench.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptor import (
+    CONFIG_IRQ_ENABLE,
+    DescriptorArray,
+    to_packed,
+)
+from repro.core.engine import (
+    execute_blocked,
+    execute_blocked_2d,
+    execute_serial,
+)
+
+from .completion import CompletionQueue
+from .ring import RingFull, SubmissionRing
+
+TIERS = ("serial", "blocked", "blocked_2d", "control")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    name: str
+    tier: str = "serial"
+    ring_capacity: int = 64
+    weight: int = 1            # weighted-arbitration share
+    max_len: int = 128         # serial tier: static max burst (elements)
+    unit: int = 1              # blocked tier: uniform transfer unit
+    use_kernel: bool = False   # blocked_2d tier: drain via Pallas kernel
+
+    def __post_init__(self):
+        if self.tier not in TIERS:
+            raise ValueError(f"unknown tier {self.tier!r}; one of {TIERS}")
+        if self.weight < 1:
+            raise ValueError("channel weight must be >= 1")
+
+
+@dataclasses.dataclass
+class _Batch:
+    """One submitted chain, pending execution on the channel's tier."""
+
+    tickets: List[int]
+    slots: List[int]
+    descs: DescriptorArray
+    src_pool: Optional[str]
+    dst_pool: Optional[str]
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    submitted: int = 0         # descriptors accepted into the ring
+    drained: int = 0           # descriptors executed
+    batches: int = 0           # drain calls that executed work
+    retired: int = 0           # ring entries retired past head
+    ring_full_events: int = 0  # backpressure occurrences
+
+
+class Channel:
+    def __init__(self, cfg: ChannelConfig, completion: CompletionQueue):
+        self.cfg = cfg
+        self.ring = SubmissionRing(cfg.ring_capacity)
+        self.completion = completion
+        self.pending: Deque[_Batch] = deque()
+        self.stats = ChannelStats()
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    # -- submission ---------------------------------------------------------
+    def can_accept(self, n_descriptors: int) -> bool:
+        return self.ring.free_slots >= n_descriptors
+
+    def submit(
+        self,
+        d: DescriptorArray,
+        tickets: Sequence[int],
+        *,
+        src_pool: Optional[str] = None,
+        dst_pool: Optional[str] = None,
+    ) -> List[int]:
+        """Push one chain into the ring; raises RingFull under backpressure."""
+        n = d.num_descriptors
+        if n != len(tickets):
+            raise ValueError("one ticket per descriptor")
+        packed = to_packed(d)
+        irq = (np.asarray(d.config) & int(CONFIG_IRQ_ENABLE)) != 0
+        try:
+            slots = self.ring.push_table(packed, tickets, irq=irq)
+        except RingFull:
+            self.stats.ring_full_events += 1
+            raise
+        self.stats.submitted += n
+        if self.cfg.tier != "control":
+            self.pending.append(_Batch(list(map(int, tickets)), slots, d,
+                                       src_pool, dst_pool))
+        return slots
+
+    # -- execution ----------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending)
+
+    def _execute(self, d: DescriptorArray, src: jax.Array,
+                 dst: jax.Array) -> jax.Array:
+        tier = self.cfg.tier
+        if tier == "serial":
+            out, _ = execute_serial(d, src, dst, max_len=self.cfg.max_len)
+        elif tier == "blocked":
+            out, _ = execute_blocked(d, src, dst, unit=self.cfg.unit)
+        elif tier == "blocked_2d":
+            if self.cfg.use_kernel:
+                from repro.kernels import descriptor_copy_op
+                shape = dst.shape
+                src2 = src.reshape(src.shape[0], -1)
+                dst2 = dst.reshape(dst.shape[0], -1)
+                active = np.asarray(d.length) >= 0
+                sidx = jnp.where(jnp.asarray(active), d.src, -1)
+                didx = jnp.where(jnp.asarray(active), d.dst, -1)
+                out = descriptor_copy_op(sidx, didx, src2, dst2).reshape(shape)
+            else:
+                out, _ = execute_blocked_2d(d, src, dst)
+        else:
+            raise ValueError(f"tier {tier!r} carries no data")
+        return out
+
+    def drain_one(self, pools: Dict[str, jax.Array]) -> bool:
+        """Execute the oldest pending batch against the named pools.
+
+        Mutates ``pools[dst_pool]`` with the transferred data, writes the
+        §II-D completion into every ring slot of the batch, then retires
+        the ring into the completion queue. Returns True if work ran.
+        """
+        if not self.pending:
+            return self._retire()
+        b = self.pending.popleft()
+        src = pools[b.src_pool]
+        dst = pools[b.dst_pool]
+        pools[b.dst_pool] = self._execute(b.descs, src, dst)
+        for slot in b.slots:
+            self.ring.mark_done(slot)
+        self.stats.drained += b.descs.num_descriptors
+        self.stats.batches += 1
+        self._retire()
+        return True
+
+    def _retire(self) -> bool:
+        entries = self.ring.retire()
+        if entries:
+            self.stats.retired += len(entries)
+            self.completion.post_retired(self.name, entries)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Arbitration
+# ---------------------------------------------------------------------------
+
+class RoundRobinArbiter:
+    """Fair RR over channel names; skips ineligible channels."""
+
+    def __init__(self, names: Sequence[str]):
+        self._names = list(names)
+        self._i = 0
+
+    def pick(self, eligible: Sequence[str]) -> Optional[str]:
+        if not self._names:
+            return None
+        eligible = set(eligible)
+        for k in range(len(self._names)):
+            cand = self._names[(self._i + k) % len(self._names)]
+            if cand in eligible:
+                self._i = (self._i + k + 1) % len(self._names)
+                return cand
+        return None
+
+
+class WeightedArbiter:
+    """Smooth weighted round-robin (nginx-style): each pick, every
+    channel's credit grows by its weight; the max-credit eligible channel
+    wins and pays back the total weight. Long-run selection frequencies are
+    proportional to weights, with no bursts."""
+
+    def __init__(self, weights: Dict[str, int]):
+        if not weights:
+            raise ValueError("need at least one channel")
+        self._weights = dict(weights)
+        self._credit = {k: 0 for k in weights}
+
+    def pick(self, eligible: Sequence[str]) -> Optional[str]:
+        eligible = [e for e in eligible if e in self._weights]
+        if not eligible:
+            return None
+        for k, w in self._weights.items():
+            self._credit[k] += w
+        best = max(eligible, key=lambda k: (self._credit[k], k))
+        self._credit[best] -= sum(self._weights.values())
+        return best

@@ -4,8 +4,11 @@ Fixed-capacity slot model: every engine step decodes one token for each
 occupied slot (prompt tokens are teacher-forced through the same path —
 "prefill-as-decode"), new requests are admitted into free slots between
 steps, and completions are signalled by the paper's writeback convention:
-each request owns a descriptor whose first-8-bytes all-ones flag the
-scheduler polls (§II-D; no interrupts on TPU — DESIGN.md §2).
+each request owns a control descriptor in a :mod:`repro.runtime` channel
+ring whose first-8-bytes all-ones flag the scheduler polls (§II-D; no
+interrupts on TPU — DESIGN.md §2). All descriptor work in the serve path
+goes through the runtime — the engine never calls ``execute_*`` directly
+(DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -18,9 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import descriptor as D
 from repro.models import DecodeState, decode_step
 from repro.models.transformer import init_decode_caches
+from repro.runtime import ChannelConfig, DMARuntime
 
 
 @dataclasses.dataclass
@@ -45,16 +48,30 @@ class _Slot:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, capacity: int = 4,
-                 max_len: int = 128, greedy: bool = True):
+                 max_len: int = 128, greedy: bool = True,
+                 runtime: Optional[DMARuntime] = None,
+                 completion_ring: int = 256):
         self.params, self.cfg = params, cfg
         self.capacity, self.max_len = capacity, max_len
         self.greedy = greedy
         self.queue: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(capacity)]
         self.completed: Dict[int, Request] = {}
-        # Completion table: one descriptor per request; writeback on finish.
-        self._completion = D.pack([0] * 0, [], [], [], [])
-        self._completion_rows: Dict[int, int] = {}
+        # Completion channel: one control descriptor per request, living in
+        # a submission ring; the step loop performs the §II-D writeback on
+        # finish and poll_completed observes it through the ring.
+        self.runtime = runtime or DMARuntime(
+            [ChannelConfig(name="completion", tier="control",
+                           ring_capacity=completion_ring)])
+        self._completion_channel = "completion"
+        ch = self.runtime.channels.get(self._completion_channel)
+        if ch is None or ch.cfg.tier != "control":
+            raise ValueError(
+                "runtime must provide a control-tier channel named "
+                f"'{self._completion_channel}' for request completions")
+        self._tickets: Dict[int, int] = {}        # uid -> ring ticket
+        self._ticket_uid: Dict[int, int] = {}     # ring ticket -> uid
+        self._delivered: Dict[int, Request] = {}  # completion-event'd uids
         caches = init_decode_caches(cfg, capacity, max_len)
         self.state = DecodeState(
             caches, jnp.zeros((capacity,), jnp.int32))
@@ -64,23 +81,30 @@ class ServeEngine:
 
     # -- API -------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        row = len(self._completion)
-        table = D.pack([req.max_new_tokens], [D.CONFIG_IRQ_ENABLE],
-                       [D.END_OF_CHAIN], [req.uid], [0])
-        self._completion = np.concatenate([self._completion, table]) \
-            if len(self._completion) else table
-        self._completion_rows[req.uid] = row
+        res = self.runtime.submit_control(
+            payload=req.uid, channel=self._completion_channel)
+        self._tickets[req.uid] = res.tickets[-1]
+        self._ticket_uid[res.tickets[-1]] = req.uid
         self.queue.append(req)
 
     def poll_completed(self) -> List[Request]:
-        """Scheduler-side completion polling via descriptor writeback flags."""
-        done_rows = np.nonzero(D.is_done_packed(self._completion))[0] \
-            if len(self._completion) else []
-        out = []
-        for uid, row in list(self._completion_rows.items()):
-            if row in done_rows and uid in self.completed:
-                out.append(self.completed[uid])
-        return out
+        """Scheduler-side completion polling via descriptor writeback flags.
+
+        Drains the runtime (retiring written-back ring entries into the
+        completion queue) and returns every request whose writeback has
+        been observed — either as a retired completion event or by
+        scanning live ring slots, so a finished request is visible even
+        while in-order retirement is blocked behind an older one.
+        """
+        self.runtime.drain_all()
+        done_tickets = [rec.ticket for rec in self.runtime.poll()]
+        ring = self.runtime.channels[self._completion_channel].ring
+        done_tickets.extend(ring.live_done_tickets())
+        for ticket in done_tickets:
+            uid = self._ticket_uid.get(ticket)
+            if uid is not None and uid in self.completed:
+                self._delivered[uid] = self.completed[uid]
+        return list(self._delivered.values())
 
     def run(self, max_steps: int = 1000) -> Dict[int, Request]:
         while (self.queue or any(s.busy for s in self.slots)) \
@@ -175,8 +199,8 @@ class ServeEngine:
                         or int(cur[b]) >= self.max_len - 1)
             if finished:
                 self.completed[r.uid] = r
-                # §II-D completion writeback: first 8 bytes -> all ones.
-                D.mark_done_packed(self._completion,
-                                   self._completion_rows[r.uid])
+                # §II-D completion writeback: first 8 bytes -> all ones,
+                # applied to the request's ring slot through the runtime.
+                self.runtime.complete(self._tickets[r.uid])
                 slot.request = None
         self.steps += 1

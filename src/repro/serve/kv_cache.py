@@ -3,6 +3,11 @@ block table). One page = one descriptor: `src` = page id in the pool,
 `next` links the sequence's pages, end-of-chain = -1. The allocator owns
 placement, so chains are laid out sequentially when possible — making the
 hardware's sequential speculation hit by construction (DESIGN.md §2).
+
+Page *moves* (defragmentation, migration) are descriptor work and go
+through the multi-channel DMA runtime (DESIGN.md §3): the pool registers
+its page arrays as runtime pools and submits row-move chains instead of
+calling execution engines directly.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import numpy as np
 from repro.core.chain import from_pages
 from repro.core.descriptor import DescriptorArray
 from repro.core.prefetch import estimate_hit_rate
+from repro.runtime import DMARuntime
 
 
 class OutOfPages(RuntimeError):
@@ -119,6 +125,69 @@ class PagedKVCache:
     def chain(self, slot: int) -> DescriptorArray:
         pages = [int(p) for p in self.tables[slot] if p >= 0]
         return from_pages(pages, self.page * self.kv_heads * self.head_dim)
+
+    # -- runtime-mediated page moves (DESIGN.md §3) ---------------------------
+    _POOL_K = "kv.k_pages"
+    _POOL_V = "kv.v_pages"
+
+    def register_with_runtime(self, rt: DMARuntime) -> None:
+        """Expose the page arrays as runtime pools (idempotent refresh)."""
+        rt.register_pool(self._POOL_K, self.k_pages)
+        rt.register_pool(self._POOL_V, self.v_pages)
+
+    def move_pages(self, rt: DMARuntime, src_pages: List[int],
+                   dst_pages: List[int], *,
+                   channel: Optional[str] = None) -> None:
+        """Relocate whole pages through the runtime (no direct engine call).
+
+        Submits one row-move chain per pool (K and V) on a ``blocked_2d``
+        channel, drains the runtime, and refreshes the local arrays from
+        the runtime pools.
+        """
+        if len(src_pages) != len(dst_pages):
+            raise ValueError("src/dst page lists must pair up")
+        if not src_pages:
+            return
+        self.register_with_runtime(rt)
+        moves = DescriptorArray.create(
+            np.asarray(src_pages, np.int64),
+            np.asarray(dst_pages, np.int64),
+            np.ones(len(src_pages), np.int64))
+        rt.submit(moves, src_pool=self._POOL_K, dst_pool=self._POOL_K,
+                  channel=channel, tier=None if channel else "blocked_2d")
+        rt.submit(moves, src_pool=self._POOL_V, dst_pool=self._POOL_V,
+                  channel=channel, tier=None if channel else "blocked_2d")
+        rt.drain_until_idle()
+        self.k_pages = rt.pool(self._POOL_K)
+        self.v_pages = rt.pool(self._POOL_V)
+
+    def defragment(self, slot: int, rt: DMARuntime, *,
+                   channel: Optional[str] = None) -> float:
+        """Compact `slot`'s pages onto the lowest-id free run and return the
+        §II-C speculation hit rate of the new layout.
+
+        The physical copy is descriptor work submitted through the runtime;
+        the block table and allocator state are rewired afterwards. A slot
+        already on its best layout is left untouched.
+        """
+        old = [int(p) for p in self.tables[slot] if p >= 0]
+        n = len(old)
+        if n == 0:
+            return 1.0
+        free = sorted(self.alloc._free)
+        if len(free) < n:
+            return self.alloc.speculation_hit_rate(slot)
+        new = free[:n]
+        new_rate = estimate_hit_rate(np.asarray(new, np.int64) * 32)
+        cur_rate = self.alloc.speculation_hit_rate(slot)
+        if new_rate <= cur_rate:
+            return cur_rate
+        self.move_pages(rt, old, new, channel=channel)
+        # Rewire bookkeeping: slot now owns `new`; `old` returns to the pool.
+        self.alloc._free = [p for p in free if p not in set(new)] + old
+        self.alloc._owned[slot] = list(new)
+        self.tables[slot, :n] = np.asarray(new, np.int32)
+        return new_rate
 
     def dense_view(self, slot: int) -> Tuple[np.ndarray, np.ndarray]:
         """Materialize the logical (len, KV, D) cache (host-side oracle)."""

@@ -1,6 +1,7 @@
 """Chain building, flattening (pointer doubling vs serial walk), layout planning."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

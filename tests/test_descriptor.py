@@ -1,6 +1,7 @@
 """Descriptor format: packing, round trips, completion semantics."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import descriptor as D

@@ -1,5 +1,7 @@
 """Engines vs host oracle: serial chain-order semantics, blocked gather/scatter."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
