@@ -5,7 +5,6 @@ the dry-run JSONs. Invoked manually after sweeps:
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 

@@ -1,8 +1,21 @@
 """Benchmark orchestrator. One module per paper table/figure; prints
-``name,us_per_call,derived`` CSV (deliverable d) and writes the runtime
-perf trajectory to BENCH_runtime.json for cross-PR comparison."""
+``name,us_per_call,derived`` CSV (deliverable d) and regenerates BOTH
+baseline artifacts from one entrypoint:
+
+* ``BENCH_runtime.json`` — the runtime perf trajectory (launch latency,
+  per-channel utilization, coalescer effectiveness);
+* ``BENCH_perf.json``    — the gated scenario-sweep contract consumed by
+  ``python -m repro.perf.gate`` (DESIGN.md §4).
+
+``--seed`` threads one seed through every seeded generator, so the
+deterministic sections of both documents regenerate bit-for-bit:
+``python benchmarks/run.py --seed 0`` twice yields byte-identical
+BENCH_perf.json (wall-clock fields in BENCH_runtime.json are excluded
+from that claim and marked as such in the document).
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
@@ -17,24 +30,51 @@ from benchmarks import (
     table4_latency,
 )
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-def main() -> None:
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Regenerate every benchmark table/figure and both "
+                    "BENCH_*.json baselines.")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for every deterministic generator "
+                         "(baselines regenerate bit-for-bit)")
+    ap.add_argument("--perf-mode", choices=("quick", "full", "skip"),
+                    default="quick",
+                    help="scenario-sweep size for BENCH_perf.json; "
+                         "'skip' leaves the committed baseline untouched")
+    ap.add_argument("--out-dir", type=pathlib.Path, default=REPO_ROOT,
+                    help="where to write BENCH_*.json")
+    args = ap.parse_args(argv)
+
     csv_rows: list = []
     fig4_utilization.run(csv_rows)
     fig5_hitrate.run(csv_rows)
     table2_area.run(csv_rows)
     table4_latency.run(csv_rows)
     bench_engine.run(csv_rows)
-    runtime_metrics = bench_runtime.run(csv_rows)
+    runtime_metrics = bench_runtime.run(csv_rows, seed=args.seed)
     roofline.run(csv_rows)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")
 
-    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
-    out.write_text(json.dumps(runtime_metrics, indent=2, sort_keys=True))
+    out = args.out_dir / "BENCH_runtime.json"
+    runtime_metrics["seed"] = args.seed
+    out.write_text(json.dumps(runtime_metrics, indent=2, sort_keys=True)
+                   + "\n")
     print(f"wrote {out}")
+
+    if args.perf_mode != "skip":
+        from repro.perf.sweep import default_spec, run_sweep, write_doc
+        perf_out = args.out_dir / "BENCH_perf.json"
+        doc = run_sweep(default_spec(args.perf_mode, args.seed))
+        write_doc(doc, str(perf_out))
+        print(f"wrote {perf_out}: {len(doc['cells'])} cells "
+              f"(mode={args.perf_mode}, seed={args.seed})")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

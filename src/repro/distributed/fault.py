@@ -9,13 +9,12 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
-import jax
 from jax.sharding import Mesh
 
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig
 
-from .sharding import param_specs, to_named, train_state_specs
+from .sharding import to_named, train_state_specs
 
 
 def reshard_checkpoint(

@@ -10,7 +10,6 @@ view lives in :mod:`repro.serve.kv_cache` and lowers to
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax

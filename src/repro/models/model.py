@@ -6,13 +6,12 @@ frontend is a stub; the backbone is exact.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed import shard
 from .layers import (
     embed,
     init_embed,

@@ -8,8 +8,7 @@ the 40-cell dry-run compile budget.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ from .attention import (
     init_attention,
     init_cache,
 )
-from .layers import dense_init, init_mlp, init_rms_norm, mlp, rms_norm
+from .layers import init_mlp, init_rms_norm, mlp, rms_norm
 from .mamba import MambaCache, init_mamba, mamba_decode, mamba_layer
 from .moe import init_moe, moe_ffn
 

@@ -9,7 +9,6 @@ Implemented with shard_map + psum over the named "pod" axis.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

@@ -1,0 +1,290 @@
+"""Perf-regression gate: compare a sweep against a committed baseline.
+
+``python -m repro.perf.gate --baseline BENCH_perf.json`` re-runs the sweep
+with the exact spec recorded inside the baseline document (mode, seed,
+repeats, dimensions — so the comparison is seeded-median vs seeded-median)
+and fails with a nonzero exit when any gated metric regresses past its
+tolerance band. Every failure names the cell (arch/workload/channels/L)
+and the metric, so a red CI run points at *what* eroded, not just *that*
+something did.
+
+Comparison semantics (DESIGN.md §4):
+
+* metrics have a polarity — ``bus_utilization``, ``coalesce_merge_ratio``
+  and ``speculation_hit_rate`` regress *downward*,
+  ``launch_cycles_per_transfer`` regresses *upward*;
+* a cell fails when the relative change in the bad direction exceeds the
+  metric's tolerance band (improvements never fail, however large);
+* a baseline cell or metric missing from the current run is an *error*
+  (exit 2), not a pass — silence must never look green;
+* schema-version or spec mismatches between the documents are errors too.
+
+Exit codes: 0 pass, 1 regression, 2 malformed/incomparable documents.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from .sweep import (
+    GATED_METRICS,
+    SCHEMA_VERSION,
+    run_sweep,
+    spec_from_doc,
+    write_doc,
+)
+
+
+class GateError(Exception):
+    """The documents cannot be compared (schema, spec, or coverage)."""
+
+
+#: Relative tolerance bands per gated metric (fraction of baseline value).
+DEFAULT_TOLERANCES: Dict[str, float] = {
+    "bus_utilization": 0.03,
+    "launch_cycles_per_transfer": 0.05,
+    "coalesce_merge_ratio": 0.03,
+    "speculation_hit_rate": 0.03,
+}
+
+#: +1 -> higher is better (regression = drop); -1 -> lower is better.
+METRIC_POLARITY: Dict[str, int] = {
+    "bus_utilization": +1,
+    "launch_cycles_per_transfer": -1,
+    "coalesce_merge_ratio": +1,
+    "speculation_hit_rate": +1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    cell: str
+    metric: str
+    baseline: float
+    current: float
+    rel_change: float       # signed, in the metric's natural direction
+    tolerance: float
+
+    @property
+    def message(self) -> str:
+        return (f"REGRESSION cell={self.cell} metric={self.metric} "
+                f"baseline={self.baseline:.6g} current={self.current:.6g} "
+                f"({self.rel_change:+.2%} exceeds "
+                f"{self.tolerance:.0%} tolerance)")
+
+
+def load_doc(path: str) -> Dict[str, object]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        raise GateError(f"baseline document not found: {path}")
+    except json.JSONDecodeError as e:
+        raise GateError(f"{path} is not valid JSON: {e}")
+    check_schema(doc, path)
+    return doc
+
+
+_REQUIRED_DIMS = ("archs", "workloads", "channel_counts", "mem_latencies")
+
+
+def check_schema(doc: Dict[str, object], label: str = "document") -> None:
+    version = doc.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise GateError(
+            f"{label}: schema_version {version!r} does not match this "
+            f"tool's schema {SCHEMA_VERSION}; regenerate the baseline with "
+            "`python -m repro.perf.sweep` (see DESIGN.md §4 re-baselining)")
+    if not isinstance(doc.get("cells"), dict) or not doc["cells"]:
+        raise GateError(f"{label}: no cells — not a sweep document")
+    for key in ("mode", "seed", "repeats"):
+        if key not in doc:
+            raise GateError(
+                f"{label}: missing {key!r} — malformed sweep document; "
+                "regenerate it")
+    dims = doc.get("dimensions")
+    if not isinstance(dims, dict) or any(d not in dims
+                                         for d in _REQUIRED_DIMS):
+        raise GateError(
+            f"{label}: missing or incomplete 'dimensions' (need "
+            f"{_REQUIRED_DIMS}) — malformed sweep document; regenerate it")
+
+
+def compare(
+    baseline: Dict[str, object],
+    current: Dict[str, object],
+    tolerances: Optional[Dict[str, float]] = None,
+) -> List[Regression]:
+    """All tolerance-band violations of ``current`` vs ``baseline``.
+
+    Raises :class:`GateError` when the documents are incomparable: schema
+    mismatch, a baseline cell absent from the current run, or a gated
+    metric absent from a present cell.
+    """
+    check_schema(baseline, "baseline")
+    check_schema(current, "current")
+    tol = dict(DEFAULT_TOLERANCES)
+    if tolerances:
+        tol.update(tolerances)
+
+    regressions: List[Regression] = []
+    cur_cells = current["cells"]
+    for key, cell in sorted(baseline["cells"].items()):
+        cur = cur_cells.get(key)
+        if cur is None:
+            raise GateError(
+                f"cell {key} present in baseline but missing from current "
+                "run — sweep coverage shrank (did the registry or workload "
+                "set change without re-baselining?)")
+        base_metrics = cell.get("metrics")
+        if not isinstance(base_metrics, dict):
+            raise GateError(
+                f"cell {key}: baseline cell has no metrics dict — the "
+                "baseline document is malformed; regenerate it")
+        cur_metrics = cur.get("metrics", {})
+        for metric in GATED_METRICS:
+            if metric not in base_metrics:
+                raise GateError(
+                    f"cell {key}: gated metric {metric!r} missing from "
+                    "baseline — the baseline predates this metric; "
+                    "re-baseline (DESIGN.md §4)")
+            if metric not in cur_metrics:
+                raise GateError(
+                    f"cell {key}: gated metric {metric!r} missing from "
+                    "current run — the sweep stopped measuring it")
+            base_v = float(base_metrics[metric])
+            cur_v = float(cur_metrics[metric])
+            denom = max(abs(base_v), 1e-12)
+            rel = (cur_v - base_v) / denom
+            polarity = METRIC_POLARITY[metric]
+            band = tol.get(metric, 0.05)
+            if polarity * rel < -band:
+                regressions.append(Regression(
+                    cell=key, metric=metric, baseline=base_v,
+                    current=cur_v, rel_change=rel, tolerance=band))
+    return regressions
+
+
+#: The dimensions a quick (CI) sweep covers; --quick gates this subset.
+_QUICK_CHANNELS = (4,)
+_QUICK_LATENCIES = (13, 100)
+
+
+def quick_subset(doc: Dict[str, object]):
+    """Restrict a baseline to the quick sweep dimensions (ch4, L13/L100).
+
+    Lets CI gate a reduced sweep against a *full-mode* baseline: the
+    returned document keeps the baseline's mode/scale (so re-run cells
+    stay comparable) but drops cells outside the quick channel/latency
+    axes. Returns ``(subset_doc, n_dropped)``; raises GateError when
+    nothing remains (the baseline never covered the quick dimensions).
+    """
+    dims = doc["dimensions"]
+    ch = [c for c in dims["channel_counts"] if c in _QUICK_CHANNELS]
+    lat = [m for m in dims["mem_latencies"] if m in _QUICK_LATENCIES]
+    cells = {k: c for k, c in doc["cells"].items()
+             if c.get("channels") in ch and c.get("mem_latency") in lat}
+    if not cells:
+        raise GateError(
+            "--quick: baseline has no cells in the quick dimensions "
+            f"(channels {_QUICK_CHANNELS}, latencies {_QUICK_LATENCIES}); "
+            "run without --quick or re-baseline")
+    out = dict(doc)
+    out["dimensions"] = dict(dims, channel_counts=ch, mem_latencies=lat)
+    out["cells"] = cells
+    return out, len(doc["cells"]) - len(cells)
+
+
+def _parse_tolerances(pairs: Sequence[str]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for p in pairs:
+        if "=" not in p:
+            raise GateError(
+                f"--tolerance expects metric=fraction, got {p!r}")
+        k, v = p.split("=", 1)
+        if k not in GATED_METRICS:
+            raise GateError(
+                f"--tolerance: unknown metric {k!r}; have {GATED_METRICS}")
+        try:
+            out[k] = float(v)
+        except ValueError:
+            raise GateError(f"--tolerance: {v!r} is not a number")
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.perf.gate",
+        description="Compare a perf sweep against a committed baseline; "
+                    "exit 1 on regression.")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_perf.json to compare against")
+    ap.add_argument("--current",
+                    help="precomputed sweep document; omitted -> re-run the "
+                         "sweep with the baseline's recorded spec")
+    ap.add_argument("--quick", action="store_true",
+                    help="gate only the quick-dimension subset of the "
+                         "baseline (ch=4, L in {13,100}) — the reduced "
+                         "sweep CI runs; errors if the baseline never "
+                         "covered those dimensions")
+    ap.add_argument("--out",
+                    help="also write the current sweep document here "
+                         "(e.g. for CI artifact upload)")
+    ap.add_argument("--tolerance", action="append", default=[],
+                    metavar="METRIC=FRACTION",
+                    help="override a tolerance band, repeatable")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the current sweep over --baseline instead "
+                         "of comparing (re-baselining, DESIGN.md §4)")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.quick and args.update_baseline:
+            raise GateError(
+                "--update-baseline with --quick would shrink the baseline "
+                "to the quick subset; re-baseline from a full sweep")
+        baseline = load_doc(args.baseline)
+        tolerances = _parse_tolerances(args.tolerance)
+        if args.quick:
+            baseline, dropped = quick_subset(baseline)
+            if dropped:
+                print(f"--quick: gating {len(baseline['cells'])} of "
+                      f"{len(baseline['cells']) + dropped} baseline cells "
+                      "(quick dimensions; the rest need a full run)")
+        if args.current:
+            current = load_doc(args.current)
+        else:
+            spec = spec_from_doc(baseline)
+            print(f"re-running sweep: mode={spec.mode} seed={spec.seed} "
+                  f"repeats={spec.repeats} "
+                  f"({len(baseline['cells'])} baseline cells)")
+            current = run_sweep(spec)
+        if args.out:
+            write_doc(current, args.out)
+            print(f"wrote current sweep to {args.out}")
+        if args.update_baseline:
+            write_doc(current, args.baseline)
+            print(f"re-baselined {args.baseline} "
+                  f"({len(current['cells'])} cells)")
+            return 0
+        regressions = compare(baseline, current, tolerances)
+    except GateError as e:
+        print(f"GATE ERROR: {e}", file=sys.stderr)
+        return 2
+
+    n = len(baseline["cells"])
+    if regressions:
+        for r in regressions:
+            print(r.message, file=sys.stderr)
+        print(f"perf gate: FAIL — {len(regressions)} regression(s) "
+              f"across {n} cells", file=sys.stderr)
+        return 1
+    print(f"perf gate: PASS — {n} cells within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

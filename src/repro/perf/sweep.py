@@ -1,0 +1,257 @@
+"""Scenario sweep: every (config x workload x channels x mem-latency) cell.
+
+Each cell runs twice, once in each substrate:
+
+1. **Runtime pass** — the cell's workload chains are submitted to a real
+   :class:`repro.runtime.DMARuntime` with ``channels`` serial-tier virtual
+   channels and drained to idle. A :class:`repro.runtime.PerfProbe` is
+   attached, so coalescer merge ratio, §II-C speculation hit rate, and the
+   per-channel counters come from the runtime's own instrumentation hooks,
+   not from sweep-side re-derivation.
+2. **Cycle-model pass** — :func:`repro.core.simulator.simulate_multichannel`
+   reproduces the cell's bus behaviour (N frontends, fair arbiter, the
+   cell's memory latency) at the workload's representative transfer size,
+   yielding steady-state bus utilization and launch cycles per transfer.
+
+The output document (``BENCH_perf.json``) is *bit-for-bit reproducible*
+from ``(mode, seed)``: gated metrics are medians over ``repeats`` seeded
+re-generations, wall-clock numbers never enter the document, and stored
+counters are the deterministic subset of the probe snapshot.
+
+CLI: ``python -m repro.perf.sweep --out BENCH_perf.json [--full] [--seed N]``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, list_archs
+from repro.core.simulator import simulate_multichannel
+from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
+
+from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
+
+SCHEMA_VERSION = 1
+
+#: The gated perf surface. gate.py refuses documents missing any of these.
+GATED_METRICS = (
+    "bus_utilization",
+    "launch_cycles_per_transfer",
+    "coalesce_merge_ratio",
+    "speculation_hit_rate",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Fully determines one sweep (and hence one baseline document)."""
+
+    mode: str
+    seed: int
+    repeats: int
+    archs: Sequence[str]
+    workloads: Sequence[str]
+    channel_counts: Sequence[int]
+    mem_latencies: Sequence[int]
+
+    @property
+    def scale(self) -> Scale:
+        return SCALES[self.mode]
+
+
+def default_spec(
+    mode: str = "quick",
+    seed: int = 0,
+    *,
+    archs: Optional[Sequence[str]] = None,
+    workloads: Optional[Sequence[str]] = None,
+    channel_counts: Optional[Sequence[int]] = None,
+    mem_latencies: Optional[Sequence[int]] = None,
+    repeats: Optional[int] = None,
+) -> SweepSpec:
+    if mode not in SCALES:
+        raise ValueError(f"unknown mode {mode!r}; have {sorted(SCALES)}")
+    quick = mode == "quick"
+    return SweepSpec(
+        mode=mode,
+        seed=seed,
+        repeats=repeats if repeats is not None else (3 if quick else 5),
+        archs=tuple(archs if archs is not None else list_archs()),
+        workloads=tuple(workloads if workloads is not None else WORKLOAD_NAMES),
+        channel_counts=tuple(channel_counts if channel_counts is not None
+                             else ((4,) if quick else (1, 2, 4))),
+        mem_latencies=tuple(mem_latencies if mem_latencies is not None
+                            else ((13, 100) if quick else (1, 13, 100))),
+    )
+
+
+def cell_key(arch: str, workload: str, channels: int, mem_latency: int) -> str:
+    return f"{arch}/{workload}/ch{channels}/L{mem_latency}"
+
+
+_NONDETERMINISTIC_COUNTERS = ("drain_seconds", "launch_seconds")
+
+
+def _deterministic_counters(snapshot: Dict[str, object]) -> Dict[str, object]:
+    """Strip wall-clock fields so the stored document is seed-pure."""
+    out: Dict[str, object] = {}
+    for name, c in snapshot["channels"].items():
+        out[name] = {k: v for k, v in c.items()
+                     if k not in _NONDETERMINISTIC_COUNTERS}
+    return out
+
+
+def _run_runtime_pass(arch: str, workload: str, channels: int,
+                      scale: Scale, seed: int) -> Dict[str, object]:
+    cfg = get_config(arch)
+    wl = generate(workload, cfg, scale, seed)
+    probe = PerfProbe()
+    rt = DMARuntime(
+        [ChannelConfig(name=f"ch{i}", tier="serial",
+                       ring_capacity=scale.ring_capacity,
+                       max_len=scale.max_len)
+         for i in range(channels)],
+        arbitration="round_robin", backpressure="block")
+    rt.attach_probe(probe)
+    rt.register_pool("src", jnp.zeros(wl.pool_elems, jnp.float32))
+    rt.register_pool("dst", jnp.zeros(wl.pool_elems, jnp.float32))
+    for d in wl.chains:
+        rt.submit(d, src_pool="src", dst_pool="dst", tier="serial")
+    rt.drain_until_idle()
+    st = rt.stats()
+    return {
+        "merge_ratio": float(st["coalesce_merge_ratio"]),
+        "hit_rate": float(st["mean_input_hit_rate"]),
+        "launch_us_per_descriptor": float(st["launch_us_per_descriptor"]),
+        "transfer_bytes": wl.transfer_bytes,
+        "counters": _deterministic_counters(probe.snapshot()),
+    }
+
+
+def run_sweep(spec: Optional[SweepSpec] = None, *,
+              progress: bool = False) -> Dict[str, object]:
+    """Execute the sweep; returns the BENCH_perf document (JSON-ready)."""
+    spec = spec or default_spec()
+    scale = spec.scale
+    cells: Dict[str, Dict[str, object]] = {}
+
+    for arch in spec.archs:
+        for workload in spec.workloads:
+            for channels in spec.channel_counts:
+                # The runtime pass is independent of memory latency; run it
+                # once per repeat and fan metrics out over the L axis.
+                passes = [
+                    _run_runtime_pass(arch, workload, channels, scale,
+                                      spec.seed + r)
+                    for r in range(spec.repeats)
+                ]
+                merge = float(np.median([p["merge_ratio"] for p in passes]))
+                hit = float(np.median([p["hit_rate"] for p in passes]))
+                # transfer_bytes is a pure function of (arch, workload) —
+                # the cycle model sees nothing seed-dependent, so it runs
+                # once per cell, not once per repeat.
+                transfer_bytes = passes[0]["transfer_bytes"]
+                assert all(p["transfer_bytes"] == transfer_bytes
+                           for p in passes), \
+                    "transfer_bytes became seed-dependent; re-run the " \
+                    "cycle model per repeat and median the results"
+                if progress:
+                    # Wall-clock launch cost is reported but NEVER stored:
+                    # the document must regenerate bit-for-bit from the seed.
+                    med = np.median([p["launch_us_per_descriptor"]
+                                     for p in passes])
+                    print(f"  {arch}/{workload}/ch{channels}: "
+                          f"launch {med:.2f} us/desc (wall-clock, unstored)",
+                          file=sys.stderr)
+                for mem_latency in spec.mem_latencies:
+                    sim = simulate_multichannel(
+                        channels, mem_latency, transfer_bytes,
+                        num_transfers=scale.sim_transfers)
+                    total = channels * scale.sim_transfers
+                    key = cell_key(arch, workload, channels, mem_latency)
+                    cells[key] = {
+                        "arch": arch,
+                        "workload": workload,
+                        "channels": channels,
+                        "mem_latency": mem_latency,
+                        "metrics": {
+                            "bus_utilization":
+                                float(sim.aggregate_utilization),
+                            "launch_cycles_per_transfer":
+                                float(sim.cycles / total),
+                            "coalesce_merge_ratio": merge,
+                            "speculation_hit_rate": hit,
+                        },
+                        "counters": passes[0]["counters"],
+                    }
+                    if progress:
+                        print(f"  {key}: "
+                              f"util={cells[key]['metrics']['bus_utilization']:.3f} "
+                              f"merge={merge:.2f} hit={hit:.2f}",
+                              file=sys.stderr)
+
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "mode": spec.mode,
+        "seed": spec.seed,
+        "repeats": spec.repeats,
+        "dimensions": {
+            "archs": list(spec.archs),
+            "workloads": list(spec.workloads),
+            "channel_counts": list(spec.channel_counts),
+            "mem_latencies": list(spec.mem_latencies),
+        },
+        "gated_metrics": list(GATED_METRICS),
+        "cells": cells,
+    }
+
+
+def spec_from_doc(doc: Dict[str, object]) -> SweepSpec:
+    """Rebuild the exact spec a document was generated with."""
+    dims = doc["dimensions"]
+    return default_spec(
+        doc["mode"], int(doc["seed"]),
+        archs=dims["archs"], workloads=dims["workloads"],
+        channel_counts=dims["channel_counts"],
+        mem_latencies=dims["mem_latencies"],
+        repeats=int(doc["repeats"]),
+    )
+
+
+def write_doc(doc: Dict[str, object], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.perf.sweep",
+        description="Run the scenario sweep and write BENCH_perf.json.")
+    ap.add_argument("--out", default="BENCH_perf.json")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", dest="mode", action="store_const",
+                      const="quick", help="reduced CI sweep (default)")
+    mode.add_argument("--full", dest="mode", action="store_const",
+                      const="full", help="full baseline sweep")
+    ap.set_defaults(mode="quick")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--progress", action="store_true")
+    args = ap.parse_args(argv)
+
+    doc = run_sweep(default_spec(args.mode, args.seed),
+                    progress=args.progress)
+    write_doc(doc, args.out)
+    print(f"wrote {args.out}: {len(doc['cells'])} cells "
+          f"(mode={args.mode}, seed={args.seed})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

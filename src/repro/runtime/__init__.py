@@ -16,6 +16,11 @@ from .channel import (  # noqa: F401
 )
 from .coalesce import CoalesceStats, coalesce, input_hit_rate  # noqa: F401
 from .completion import CompletionQueue, CompletionRecord  # noqa: F401
+from .instrumentation import (  # noqa: F401
+    ChannelCounters,
+    PerfProbe,
+    ServeCounters,
+)
 from .scheduler import (  # noqa: F401
     DMARuntime,
     SubmitResult,

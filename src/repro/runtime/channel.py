@@ -23,6 +23,7 @@ mirroring the fair RR bus arbiter of the paper's §III-A testbench.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -42,6 +43,7 @@ from repro.core.engine import (
 )
 
 from .completion import CompletionQueue
+from .instrumentation import PerfProbe
 from .ring import RingFull, SubmissionRing
 
 TIERS = ("serial", "blocked", "blocked_2d", "control")
@@ -82,6 +84,8 @@ class ChannelStats:
     batches: int = 0           # drain calls that executed work
     retired: int = 0           # ring entries retired past head
     ring_full_events: int = 0  # backpressure occurrences
+    occupancy_peak: int = 0    # ring high-water mark (slots in use)
+    drain_seconds: float = 0.0 # wall-clock spent executing batches
 
 
 class Channel:
@@ -91,6 +95,7 @@ class Channel:
         self.completion = completion
         self.pending: Deque[_Batch] = deque()
         self.stats = ChannelStats()
+        self.probe: Optional[PerfProbe] = None  # set via DMARuntime.attach_probe
 
     @property
     def name(self) -> str:
@@ -118,8 +123,15 @@ class Channel:
             slots = self.ring.push_table(packed, tickets, irq=irq)
         except RingFull:
             self.stats.ring_full_events += 1
+            if self.probe is not None:
+                self.probe.on_ring_full(self.name)
             raise
         self.stats.submitted += n
+        occupancy = self.ring.capacity - self.ring.free_slots
+        if occupancy > self.stats.occupancy_peak:
+            self.stats.occupancy_peak = occupancy
+        if self.probe is not None:
+            self.probe.on_occupancy(self.name, occupancy)
         if self.cfg.tier != "control":
             self.pending.append(_Batch(list(map(int, tickets)), slots, d,
                                        src_pool, dst_pool))
@@ -165,11 +177,18 @@ class Channel:
         b = self.pending.popleft()
         src = pools[b.src_pool]
         dst = pools[b.dst_pool]
+        t0 = time.perf_counter()
         pools[b.dst_pool] = self._execute(b.descs, src, dst)
+        dt = time.perf_counter() - t0
         for slot in b.slots:
             self.ring.mark_done(slot)
         self.stats.drained += b.descs.num_descriptors
         self.stats.batches += 1
+        self.stats.drain_seconds += dt
+        if self.probe is not None:
+            self.probe.on_drain(self.name,
+                                n_descriptors=b.descs.num_descriptors,
+                                seconds=dt)
         self._retire()
         return True
 

@@ -1,0 +1,125 @@
+"""Perf instrumentation: the counters the scenario sweep observes.
+
+The perf-regression gate (:mod:`repro.perf`) must measure what the runtime
+*actually did* — descriptors accepted, coalescer output, ring occupancy,
+drain batches — not re-derive those numbers from its own bookkeeping. A
+:class:`PerfProbe` is a passive per-channel counter sink attached to a
+:class:`repro.runtime.DMARuntime` (``attach_probe``) and, optionally, a
+:class:`repro.serve.engine.ServeEngine`. Hook sites:
+
+* ``DMARuntime.submit``   — post-coalesce descriptor counts, §II-C input
+                            hit rate, wall-clock launch seconds;
+* ``Channel.submit``      — ring occupancy high-water mark, ring-full
+                            backpressure events;
+* ``Channel.drain_one`` / ``DMARuntime._execute_fused``
+                          — drained descriptor counts and drain seconds
+                            (fused batches credited per channel);
+* ``ServeEngine.step``    — active-slot occupancy and step seconds.
+
+Probes never change behaviour: every hook is a no-op when no probe is
+attached, and a probe failure is a bug, not a recoverable condition (no
+exception guards — the probe is trusted first-party code).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass
+class ChannelCounters:
+    """What one channel did while a probe was attached."""
+
+    submits: int = 0                 # DMARuntime.submit calls routed here
+    submitted_descriptors: int = 0   # post-coalesce descriptors accepted
+    coalesce_in: int = 0             # descriptors before the planner
+    coalesce_out: int = 0            # descriptors after merge+split
+    drained_descriptors: int = 0
+    drain_batches: int = 0
+    fused_batches: int = 0           # batches executed via the fused 2-D path
+    drain_seconds: float = 0.0
+    launch_seconds: float = 0.0      # wall-clock submit-side cost
+    ring_full_events: int = 0
+    occupancy_peak: int = 0          # ring high-water mark (slots in use)
+    hit_rate_sum: float = 0.0        # §II-C input hit rate, summed
+    hit_rate_n: int = 0
+
+    @property
+    def merge_ratio(self) -> float:
+        return self.coalesce_in / max(self.coalesce_out, 1)
+
+    @property
+    def mean_input_hit_rate(self) -> float:
+        return self.hit_rate_sum / self.hit_rate_n if self.hit_rate_n else 1.0
+
+
+@dataclasses.dataclass
+class ServeCounters:
+    """Serve-engine observations (one decode step = one event)."""
+
+    steps: int = 0
+    step_seconds: float = 0.0
+    active_slot_steps: int = 0       # sum of busy slots over steps
+    completions_observed: int = 0    # requests seen via §II-D writeback
+
+
+class PerfProbe:
+    """Passive counter sink; one instance per measurement window."""
+
+    def __init__(self) -> None:
+        self.channels: Dict[str, ChannelCounters] = {}
+        self.serve = ServeCounters()
+
+    def _ch(self, channel: str) -> ChannelCounters:
+        c = self.channels.get(channel)
+        if c is None:
+            c = self.channels[channel] = ChannelCounters()
+        return c
+
+    # -- runtime-side hooks --------------------------------------------------
+    def on_submit(self, channel: str, *, n_in: int, n_out: int,
+                  launch_seconds: float,
+                  hit_rate: Optional[float] = None) -> None:
+        c = self._ch(channel)
+        c.submits += 1
+        c.submitted_descriptors += n_out
+        c.coalesce_in += n_in
+        c.coalesce_out += n_out
+        c.launch_seconds += launch_seconds
+        if hit_rate is not None:
+            c.hit_rate_sum += hit_rate
+            c.hit_rate_n += 1
+
+    def on_occupancy(self, channel: str, occupancy: int) -> None:
+        c = self._ch(channel)
+        if occupancy > c.occupancy_peak:
+            c.occupancy_peak = occupancy
+
+    def on_ring_full(self, channel: str) -> None:
+        self._ch(channel).ring_full_events += 1
+
+    def on_drain(self, channel: str, *, n_descriptors: int, seconds: float,
+                 fused: bool = False) -> None:
+        c = self._ch(channel)
+        c.drained_descriptors += n_descriptors
+        c.drain_batches += 1
+        c.fused_batches += int(fused)
+        c.drain_seconds += seconds
+
+    # -- serve-side hooks ----------------------------------------------------
+    def on_serve_step(self, active_slots: int, seconds: float) -> None:
+        self.serve.steps += 1
+        self.serve.active_slot_steps += active_slots
+        self.serve.step_seconds += seconds
+
+    def on_serve_completion(self, n: int = 1) -> None:
+        self.serve.completions_observed += n
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-ready counter dump (ints/floats only)."""
+        return {
+            "channels": {name: dataclasses.asdict(c)
+                         for name, c in sorted(self.channels.items())},
+            "serve": dataclasses.asdict(self.serve),
+        }

@@ -41,6 +41,7 @@ from .channel import (
 )
 from .coalesce import CoalesceStats, coalesce
 from .completion import CompletionQueue, CompletionRecord
+from .instrumentation import PerfProbe
 from .ring import RingFull
 
 
@@ -106,6 +107,7 @@ class DMARuntime:
             raise ValueError(f"unknown arbitration {arbitration!r}")
         self.backpressure = backpressure
         self.coalesce_max_len = coalesce_max_len
+        self.probe: Optional[PerfProbe] = None
         self.pools: Dict[str, jax.Array] = {}
         self._spill: Deque[_Spilled] = deque()
         self._next_ticket = 0
@@ -116,6 +118,18 @@ class DMARuntime:
         self.coalesce_in = 0
         self.coalesce_out = 0
         self._hit_rates: List[float] = []
+
+    # -- instrumentation ----------------------------------------------------
+    def attach_probe(self, probe: Optional[PerfProbe]) -> None:
+        """Attach (or with None, detach) a perf counter sink.
+
+        The probe observes every channel of this runtime; the perf sweep
+        (:mod:`repro.perf.sweep`) reads its snapshot instead of re-deriving
+        counters from submission-side bookkeeping.
+        """
+        self.probe = probe
+        for ch in self.channels.values():
+            ch.probe = probe
 
     # -- pools --------------------------------------------------------------
     def register_pool(self, name: str, array: jax.Array) -> None:
@@ -158,6 +172,7 @@ class DMARuntime:
         logical transfer hang their callback on ``tickets[-1]``).
         """
         t0 = time.perf_counter()
+        n_raw = d.num_descriptors
         name = channel if channel is not None else self._pick_channel(tier)
         ch = self.channels[name]
 
@@ -177,6 +192,11 @@ class DMARuntime:
 
         n = d.num_descriptors
         if n == 0:
+            if self.probe is not None:
+                self.probe.on_submit(
+                    name, n_in=n_raw, n_out=0,
+                    launch_seconds=time.perf_counter() - t0,
+                    hit_rate=stats.input_hit_rate if stats else None)
             return SubmitResult([], name, False, stats)
 
         # A chain longer than the ring is submitted in ring-sized pieces
@@ -221,7 +241,12 @@ class DMARuntime:
                         spilled = True
                         break
         self.submitted_descriptors += n
-        self.launch_seconds += time.perf_counter() - t0
+        launch = time.perf_counter() - t0
+        self.launch_seconds += launch
+        if self.probe is not None:
+            self.probe.on_submit(
+                name, n_in=n_raw, n_out=n, launch_seconds=launch,
+                hit_rate=stats.input_hit_rate if stats else None)
         return SubmitResult(tickets, name, spilled, stats)
 
     def submit_control(self, payload: int = 0, *,
@@ -320,14 +345,25 @@ class DMARuntime:
             nxt=jnp.concatenate([jnp.asarray(d.nxt) for d in descs]),
             config=jnp.concatenate([d.config for d in descs]),
         )
+        t0 = time.perf_counter()
         out, _ = execute_blocked_2d(
             fused, self.pools[src_name], self.pools[dst_name])
+        dt = time.perf_counter() - t0
         self.pools[dst_name] = out
+        # The fused call's wall-clock is apportioned per batch by descriptor
+        # share, so per-channel drain_seconds stay comparable across paths.
+        total = max(fused.num_descriptors, 1)
         for ch, b in items:
+            n_b = b.descs.num_descriptors
+            share = dt * n_b / total
             for slot in b.slots:
                 ch.ring.mark_done(slot)
-            ch.stats.drained += b.descs.num_descriptors
+            ch.stats.drained += n_b
             ch.stats.batches += 1
+            ch.stats.drain_seconds += share
+            if ch.probe is not None:
+                ch.probe.on_drain(ch.name, n_descriptors=n_b,
+                                  seconds=share, fused=True)
             ch._retire()
 
     def drain_until_idle(self, max_rounds: int = 1024) -> None:

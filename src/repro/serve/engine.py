@@ -13,6 +13,7 @@ goes through the runtime — the engine never calls ``execute_*`` directly
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -24,6 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.models import DecodeState, decode_step
 from repro.models.transformer import init_decode_caches
 from repro.runtime import ChannelConfig, DMARuntime
+from repro.runtime.instrumentation import PerfProbe
 
 
 @dataclasses.dataclass
@@ -78,6 +80,26 @@ class ServeEngine:
         self._step_fn = jax.jit(
             lambda p, t, s: decode_step(p, t, s, cfg))
         self.steps = 0
+        self.probe: Optional[PerfProbe] = None
+        self.step_seconds = 0.0
+        self.active_slot_steps = 0
+
+    # -- instrumentation ---------------------------------------------------------
+    def attach_probe(self, probe: Optional[PerfProbe]) -> None:
+        """Attach a perf counter sink to this engine AND its runtime."""
+        self.probe = probe
+        self.runtime.attach_probe(probe)
+
+    def perf_counters(self) -> Dict[str, float]:
+        """Engine-side counters the perf sweep reads directly."""
+        return {
+            "steps": self.steps,
+            "step_seconds": self.step_seconds,
+            "active_slot_steps": self.active_slot_steps,
+            "mean_active_slots":
+                self.active_slot_steps / self.steps if self.steps else 0.0,
+            "completed": len(self.completed),
+        }
 
     # -- API -------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -103,6 +125,8 @@ class ServeEngine:
         for ticket in done_tickets:
             uid = self._ticket_uid.get(ticket)
             if uid is not None and uid in self.completed:
+                if uid not in self._delivered and self.probe is not None:
+                    self.probe.on_serve_completion()
                 self._delivered[uid] = self.completed[uid]
         return list(self._delivered.values())
 
@@ -157,6 +181,7 @@ class ServeEngine:
                 self._reset_slot_caches(b)
 
     def step(self) -> None:
+        t0 = time.perf_counter()
         self._admit()
         active = np.array([s.busy for s in self.slots])
         if not active.any():
@@ -204,3 +229,9 @@ class ServeEngine:
                 self.runtime.complete(self._tickets[r.uid])
                 slot.request = None
         self.steps += 1
+        dt = time.perf_counter() - t0
+        n_active = int(active.sum())
+        self.step_seconds += dt
+        self.active_slot_steps += n_active
+        if self.probe is not None:
+            self.probe.on_serve_step(n_active, dt)

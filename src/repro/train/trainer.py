@@ -10,14 +10,13 @@ import time
 from typing import Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig
 from repro.data import DataConfig, DataIterator, IteratorState
 from repro.models import init_params
 
-from .step import TrainConfig, TrainState, init_state, jit_train_step
+from .step import TrainConfig, init_state, jit_train_step
 
 
 @dataclasses.dataclass

@@ -2,9 +2,9 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need hypothesis
+pytestmark = pytest.mark.slow  # property suites: run in CI's slow job
 from hypothesis import given, settings, strategies as st
 
-import jax.numpy as jnp
 
 from repro.core import chain as C
 from repro.core.descriptor import DescriptorArray

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need hypothesis
+pytestmark = pytest.mark.slow  # property suites: run in CI's slow job
 from hypothesis import given, settings, strategies as st
 
 from repro.core import descriptor as D

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import SSMConfig
 from repro.models.attention import blockwise_attention
 from repro.models.layers import apply_rope, rms_norm, softmax_cross_entropy
 from repro.models.mamba import init_mamba, mamba_decode, mamba_layer, MambaCache

@@ -1,0 +1,191 @@
+"""Perf subsystem: workload generators, sweep determinism, probe counters.
+
+No hypothesis dependency — this module must collect on minimal installs.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, list_archs
+from repro.core.chain import from_segments
+from repro.perf.workloads import (
+    QUICK,
+    WORKLOAD_NAMES,
+    Scale,
+    arch_params,
+    generate,
+)
+from repro.perf.sweep import default_spec, run_sweep
+from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
+
+TINY = Scale("tiny", n_bursts=1, burst_len=24, pool_elems=1 << 12,
+             max_len=128, ring_capacity=64, sim_transfers=60)
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+def test_generators_cover_every_arch_and_stay_in_bounds():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for name in WORKLOAD_NAMES:
+            wl = generate(name, cfg, TINY, seed=0)
+            assert wl.chains, (arch, name)
+            assert wl.transfer_bytes % 8 == 0 and wl.transfer_bytes >= 8
+            for d in wl.chains:
+                src = np.asarray(d.src, np.int64)
+                dst = np.asarray(d.dst, np.int64)
+                ln = np.asarray(d.length, np.int64)
+                assert (ln > 0).all(), (arch, name)
+                assert (src >= 0).all() and (dst >= 0).all()
+                assert (src + ln <= TINY.pool_elems).all(), (arch, name)
+                assert (dst + ln <= TINY.pool_elems).all(), (arch, name)
+
+
+def test_generators_deterministic_in_seed():
+    cfg = get_config(list_archs()[0])
+    for name in WORKLOAD_NAMES:
+        a = generate(name, cfg, TINY, seed=3)
+        b = generate(name, cfg, TINY, seed=3)
+        c = generate(name, cfg, TINY, seed=4)
+        for da, db in zip(a.chains, b.chains):
+            for f in ("src", "dst", "length", "nxt"):
+                assert np.array_equal(np.asarray(getattr(da, f)),
+                                      np.asarray(getattr(db, f)))
+        # a different seed must actually change the traffic
+        assert any(
+            not np.array_equal(np.asarray(da.src), np.asarray(dc.src))
+            for da, dc in zip(a.chains, c.chains)), name
+
+
+def test_arch_parameterization_differs_across_archs():
+    params = {a: arch_params(get_config(a)) for a in list_archs()}
+    assert len({p.page_elems for p in params.values()}) > 1
+    assert len({p.experts for p in params.values()}) > 1
+
+
+def test_moe_storm_defeats_prefetcher_paged_kv_does_not():
+    cfg = get_config("dbrx-132b")
+    from repro.runtime import coalesce
+    kv = generate("paged_kv", cfg, TINY, seed=0)
+    moe = generate("moe_dispatch", cfg, TINY, seed=0)
+    _, kv_stats = coalesce(kv.chains[0], max_len=TINY.max_len)
+    _, moe_stats = coalesce(moe.chains[0], max_len=TINY.max_len)
+    assert kv_stats.input_hit_rate > 0.9          # sequential table layout
+    assert moe_stats.input_hit_rate < 0.5         # shuffled storm
+    assert kv_stats.merge_ratio > moe_stats.merge_ratio
+
+
+# ---------------------------------------------------------------------------
+# Sweep
+# ---------------------------------------------------------------------------
+
+def _mini_spec(seed=0):
+    return default_spec(
+        "quick", seed, archs=[list_archs()[0]],
+        workloads=["paged_kv", "moe_dispatch"],
+        channel_counts=[2], mem_latencies=[13], repeats=2)
+
+
+def test_sweep_document_is_bit_for_bit_deterministic():
+    d1 = run_sweep(_mini_spec())
+    d2 = run_sweep(_mini_spec())
+    assert json.dumps(d1, sort_keys=True) == json.dumps(d2, sort_keys=True)
+
+
+def test_sweep_document_schema_and_counters():
+    doc = run_sweep(_mini_spec())
+    assert doc["schema_version"] == 1
+    assert doc["cells"]
+    for key, cell in doc["cells"].items():
+        assert set(cell["metrics"]) == {
+            "bus_utilization", "launch_cycles_per_transfer",
+            "coalesce_merge_ratio", "speculation_hit_rate"}
+        assert 0.0 < cell["metrics"]["bus_utilization"] <= 1.0
+        assert cell["metrics"]["coalesce_merge_ratio"] >= 1.0
+        # counters come from the runtime's own probe, wall-clock stripped
+        assert cell["counters"], key
+        for ch in cell["counters"].values():
+            assert "drain_seconds" not in ch and "launch_seconds" not in ch
+            assert ch["drained_descriptors"] == ch["submitted_descriptors"]
+
+
+def test_sweep_counters_show_real_channel_activity():
+    doc = run_sweep(_mini_spec())
+    cell = next(iter(doc["cells"].values()))
+    total = sum(c["submits"] for c in cell["counters"].values())
+    assert total > 0
+    assert len(cell["counters"]) >= 2    # round-robin spread the bursts
+
+
+# ---------------------------------------------------------------------------
+# Instrumentation hooks
+# ---------------------------------------------------------------------------
+
+def test_probe_counters_match_runtime_stats():
+    probe = PerfProbe()
+    rt = DMARuntime([ChannelConfig(name="a", tier="serial", max_len=32,
+                                   ring_capacity=64)])
+    rt.attach_probe(probe)
+    rt.register_pool("src", jnp.arange(256, dtype=jnp.float32))
+    rt.register_pool("dst", jnp.zeros(256, jnp.float32))
+    d = from_segments([0, 32, 64], [0, 32, 64], [16, 16, 16])
+    rt.submit(d, src_pool="src", dst_pool="dst", channel="a")
+    rt.drain_until_idle()
+    c = probe.channels["a"]
+    st = rt.stats()
+    assert c.submits == 1
+    assert c.coalesce_in == 3
+    assert c.submitted_descriptors == st["channels"]["a"]["submitted"]
+    assert c.drained_descriptors == st["channels"]["a"]["drained"]
+    assert c.occupancy_peak == st["channels"]["a"]["occupancy_peak"] > 0
+    assert c.drain_seconds > 0.0 and c.launch_seconds > 0.0
+    assert c.mean_input_hit_rate == pytest.approx(
+        st["mean_input_hit_rate"])
+
+
+def test_probe_records_ring_full_backpressure():
+    probe = PerfProbe()
+    rt = DMARuntime([ChannelConfig(name="a", tier="serial", max_len=8,
+                                   ring_capacity=4)],
+                    backpressure="block")
+    rt.attach_probe(probe)
+    rt.register_pool("src", jnp.arange(64, dtype=jnp.float32))
+    rt.register_pool("dst", jnp.zeros(64, jnp.float32))
+    for k in range(3):
+        d = from_segments([8 * k] * 3, [8 * k] * 3, [2, 2, 2])
+        rt.submit(d, src_pool="src", dst_pool="dst", channel="a",
+                  run_coalescer=False)
+    rt.drain_until_idle()
+    assert probe.channels["a"].ring_full_events > 0
+    assert probe.channels["a"].occupancy_peak <= 4
+
+
+def test_probe_detach_stops_counting():
+    probe = PerfProbe()
+    rt = DMARuntime([ChannelConfig(name="a", tier="serial", max_len=8,
+                                   ring_capacity=32)])
+    rt.attach_probe(probe)
+    rt.attach_probe(None)
+    rt.register_pool("src", jnp.arange(64, dtype=jnp.float32))
+    rt.register_pool("dst", jnp.zeros(64, jnp.float32))
+    rt.submit(from_segments([0], [0], [4]), src_pool="src", dst_pool="dst",
+              channel="a")
+    rt.drain_until_idle()
+    assert "a" not in probe.channels
+
+
+def test_channel_stats_gain_occupancy_and_drain_time_without_probe():
+    rt = DMARuntime([ChannelConfig(name="a", tier="serial", max_len=8,
+                                   ring_capacity=32)])
+    rt.register_pool("src", jnp.arange(64, dtype=jnp.float32))
+    rt.register_pool("dst", jnp.zeros(64, jnp.float32))
+    rt.submit(from_segments([0, 8], [0, 8], [4, 4]), src_pool="src",
+              dst_pool="dst", channel="a")
+    rt.drain_until_idle()
+    st = rt.stats()["channels"]["a"]
+    assert st["occupancy_peak"] > 0
+    assert st["drain_seconds"] > 0.0

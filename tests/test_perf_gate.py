@@ -1,0 +1,314 @@
+"""The perf-regression gate itself: tolerance bands, polarity, failure modes.
+
+No hypothesis dependency — this module must collect on minimal installs.
+"""
+import copy
+import json
+
+import pytest
+
+from repro.configs.registry import list_archs
+from repro.perf import gate
+from repro.perf.sweep import (
+    SCHEMA_VERSION,
+    default_spec,
+    run_sweep,
+    write_doc,
+)
+
+CELL = "archA/paged_kv/ch4/L13"
+
+
+def _doc(cells=None):
+    """Minimal synthetic sweep document."""
+    if cells is None:
+        cells = {CELL: _cell()}
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "mode": "quick",
+        "seed": 0,
+        "repeats": 3,
+        "dimensions": {"archs": ["archA"], "workloads": ["paged_kv"],
+                       "channel_counts": [4], "mem_latencies": [13]},
+        "gated_metrics": list(gate.GATED_METRICS),
+        "cells": cells,
+    }
+
+
+def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95):
+    return {
+        "arch": "archA", "workload": "paged_kv",
+        "channels": 4, "mem_latency": 13,
+        "metrics": {
+            "bus_utilization": util,
+            "launch_cycles_per_transfer": launch,
+            "coalesce_merge_ratio": merge,
+            "speculation_hit_rate": hit,
+        },
+        "counters": {},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Comparison semantics
+# ---------------------------------------------------------------------------
+
+def test_identical_documents_pass():
+    base = _doc()
+    assert gate.compare(base, copy.deepcopy(base)) == []
+
+
+def test_injected_ten_percent_utilization_regression_fails_named():
+    base, cur = _doc(), _doc()
+    cur["cells"][CELL]["metrics"]["bus_utilization"] = 0.66 * 0.9
+    regs = gate.compare(base, cur)
+    assert len(regs) == 1
+    r = regs[0]
+    assert r.cell == CELL
+    assert r.metric == "bus_utilization"
+    assert CELL in r.message and "bus_utilization" in r.message
+    assert r.rel_change == pytest.approx(-0.10, abs=1e-9)
+
+
+def test_within_tolerance_jitter_passes():
+    base, cur = _doc(), _doc()
+    m = cur["cells"][CELL]["metrics"]
+    m["bus_utilization"] *= 0.99        # 1% < 3% band
+    m["launch_cycles_per_transfer"] *= 1.03   # 3% < 5% band
+    m["speculation_hit_rate"] *= 0.98
+    assert gate.compare(base, cur) == []
+
+
+def test_polarity_launch_cycles_up_fails_down_passes():
+    base, up, down = _doc(), _doc(), _doc()
+    up["cells"][CELL]["metrics"]["launch_cycles_per_transfer"] *= 1.2
+    down["cells"][CELL]["metrics"]["launch_cycles_per_transfer"] *= 0.8
+    assert [r.metric for r in gate.compare(base, up)] == \
+        ["launch_cycles_per_transfer"]
+    assert gate.compare(base, down) == []
+
+
+def test_improvements_never_fail_however_large():
+    base, cur = _doc(), _doc()
+    m = cur["cells"][CELL]["metrics"]
+    m["bus_utilization"] *= 1.5
+    m["coalesce_merge_ratio"] *= 3.0
+    m["launch_cycles_per_transfer"] *= 0.1
+    assert gate.compare(base, cur) == []
+
+
+def test_tolerance_override():
+    base, cur = _doc(), _doc()
+    cur["cells"][CELL]["metrics"]["bus_utilization"] *= 0.95   # 5% drop
+    assert len(gate.compare(base, cur)) == 1
+    assert gate.compare(base, cur,
+                        tolerances={"bus_utilization": 0.10}) == []
+
+
+# ---------------------------------------------------------------------------
+# Failure modes must error clearly, never silently pass
+# ---------------------------------------------------------------------------
+
+def test_missing_metric_errors_clearly():
+    base, cur = _doc(), _doc()
+    del cur["cells"][CELL]["metrics"]["speculation_hit_rate"]
+    with pytest.raises(gate.GateError,
+                       match="speculation_hit_rate.*missing from current"):
+        gate.compare(base, cur)
+
+
+def test_metric_missing_from_baseline_errors():
+    base, cur = _doc(), _doc()
+    del base["cells"][CELL]["metrics"]["coalesce_merge_ratio"]
+    with pytest.raises(gate.GateError, match="missing from.*baseline"):
+        gate.compare(base, cur)
+
+
+def test_missing_cell_errors_clearly():
+    base, cur = _doc(), _doc(cells={})
+    cur["cells"] = {"other/cell/ch1/L1": _cell()}
+    with pytest.raises(gate.GateError, match="missing from current"):
+        gate.compare(base, cur)
+
+
+def test_schema_version_mismatch_errors_clearly():
+    base, cur = _doc(), _doc()
+    cur["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(gate.GateError, match="schema_version"):
+        gate.compare(base, cur)
+    base["schema_version"] = 0
+    with pytest.raises(gate.GateError, match="schema_version"):
+        gate.compare(base, _doc())
+
+
+def test_empty_document_is_not_a_baseline():
+    with pytest.raises(gate.GateError, match="no cells"):
+        gate.check_schema({"schema_version": SCHEMA_VERSION, "cells": {}})
+
+
+def test_missing_dimensions_or_mode_errors_clearly():
+    for key in ("dimensions", "mode", "seed", "repeats"):
+        doc = _doc()
+        del doc[key]
+        with pytest.raises(gate.GateError, match="malformed"):
+            gate.check_schema(doc)
+    doc = _doc()
+    del doc["dimensions"]["mem_latencies"]
+    with pytest.raises(gate.GateError, match="dimensions"):
+        gate.check_schema(doc)
+
+
+def test_cli_dimensionless_baseline_exits_2_not_1(tmp_path):
+    doc = _doc()
+    del doc["dimensions"]
+    p = _write(tmp_path, "malformed.json", doc)
+    assert gate.main(["--baseline", p]) == 2
+
+
+def test_baseline_cell_without_metrics_errors_not_exit1():
+    base, cur = _doc(), _doc()
+    del base["cells"][CELL]["metrics"]
+    with pytest.raises(gate.GateError, match="malformed"):
+        gate.compare(base, cur)
+
+
+# ---------------------------------------------------------------------------
+# --quick subset of a full baseline
+# ---------------------------------------------------------------------------
+
+def _full_doc():
+    cells = {}
+    for ch in (1, 4):
+        for lat in (1, 13):
+            c = _cell()
+            c["channels"], c["mem_latency"] = ch, lat
+            cells[f"archA/paged_kv/ch{ch}/L{lat}"] = c
+    doc = _doc(cells=cells)
+    doc["mode"] = "full"
+    doc["dimensions"]["channel_counts"] = [1, 4]
+    doc["dimensions"]["mem_latencies"] = [1, 13]
+    return doc
+
+
+def test_quick_subset_of_full_baseline_keeps_only_quick_cells():
+    sub, dropped = gate.quick_subset(_full_doc())
+    assert set(sub["cells"]) == {"archA/paged_kv/ch4/L13"}
+    assert dropped == 3
+    assert sub["mode"] == "full"   # re-run stays at the baseline's scale
+    assert sub["dimensions"]["channel_counts"] == [4]
+    assert sub["dimensions"]["mem_latencies"] == [13]
+
+
+def test_quick_subset_errors_when_baseline_lacks_quick_dims():
+    doc = _full_doc()
+    doc["cells"] = {k: c for k, c in doc["cells"].items()
+                    if c["channels"] != 4}
+    with pytest.raises(gate.GateError, match="quick dimensions"):
+        gate.quick_subset(doc)
+
+
+def test_cli_quick_gates_subset_of_full_baseline(tmp_path):
+    base = _write(tmp_path, "full.json", _full_doc())
+    # current covers only the quick cell, with a regression in it
+    cur = _doc(cells={"archA/paged_kv/ch4/L13": _cell(util=0.5)})
+    curp = _write(tmp_path, "cur.json", cur)
+    # without --quick the full baseline demands the missing ch1/L1 cells
+    assert gate.main(["--baseline", base, "--current", curp]) == 2
+    assert gate.main(["--baseline", base, "--current", curp,
+                      "--quick"]) == 1
+    ok = _doc(cells={"archA/paged_kv/ch4/L13": _cell()})
+    okp = _write(tmp_path, "ok.json", ok)
+    assert gate.main(["--baseline", base, "--current", okp,
+                      "--quick"]) == 0
+
+
+def test_cli_quick_update_baseline_refused(tmp_path):
+    base = _write(tmp_path, "full.json", _full_doc())
+    assert gate.main(["--baseline", base, "--quick",
+                      "--update-baseline"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_cli_pass_fail_and_error_exit_codes(tmp_path):
+    base = _doc()
+    good = _write(tmp_path, "base.json", base)
+    same = _write(tmp_path, "cur.json", _doc())
+    assert gate.main(["--baseline", good, "--current", same]) == 0
+
+    bad = _doc()
+    bad["cells"][CELL]["metrics"]["bus_utilization"] *= 0.8
+    badp = _write(tmp_path, "bad.json", bad)
+    assert gate.main(["--baseline", good, "--current", badp]) == 1
+
+    vers = _doc()
+    vers["schema_version"] = 99
+    versp = _write(tmp_path, "vers.json", vers)
+    assert gate.main(["--baseline", good, "--current", versp]) == 2
+    assert gate.main(["--baseline", str(tmp_path / "nope.json")]) == 2
+
+
+def test_cli_tolerance_flag(tmp_path):
+    base = _write(tmp_path, "base.json", _doc())
+    bad = _doc()
+    bad["cells"][CELL]["metrics"]["bus_utilization"] *= 0.95
+    badp = _write(tmp_path, "bad.json", bad)
+    assert gate.main(["--baseline", base, "--current", badp]) == 1
+    assert gate.main(["--baseline", base, "--current", badp,
+                      "--tolerance", "bus_utilization=0.10"]) == 0
+    assert gate.main(["--baseline", base, "--current", badp,
+                      "--tolerance", "nonsense=0.1"]) == 2
+
+
+def test_cli_update_baseline_rewrites_file(tmp_path):
+    base = _write(tmp_path, "base.json", _doc())
+    cur = _doc()
+    cur["cells"][CELL]["metrics"]["bus_utilization"] = 0.5
+    curp = _write(tmp_path, "cur.json", cur)
+    assert gate.main(["--baseline", base, "--current", curp,
+                      "--update-baseline"]) == 0
+    rebased = json.loads((tmp_path / "base.json").read_text())
+    assert rebased["cells"][CELL]["metrics"]["bus_utilization"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: real sweep, real injected regression
+# ---------------------------------------------------------------------------
+
+def _mini_spec():
+    return default_spec("quick", 0, archs=[list_archs()[0]],
+                        workloads=["paged_kv"], channel_counts=[2],
+                        mem_latencies=[100], repeats=2)
+
+
+def test_end_to_end_unchanged_tree_passes(tmp_path):
+    doc = run_sweep(_mini_spec())
+    p = str(tmp_path / "BENCH_perf.json")
+    write_doc(doc, p)
+    assert gate.main(["--baseline", p]) == 0
+
+
+def test_end_to_end_simulator_constant_regression_trips_gate(
+        tmp_path, monkeypatch):
+    import repro.core.simulator as sim
+    doc = run_sweep(_mini_spec())
+    base = str(tmp_path / "BENCH_perf.json")
+    write_doc(doc, base)
+    # A deeper fixed pipeline is exactly the class of change the gate must
+    # catch: every fetch round trip lengthens, utilization at L=100 drops.
+    monkeypatch.setattr(sim, "PIPE", sim.PIPE + 10)
+    worse = run_sweep(_mini_spec())
+    curp = str(tmp_path / "cur.json")
+    write_doc(worse, curp)
+    rc = gate.main(["--baseline", base, "--current", curp])
+    assert rc == 1
+    regs = gate.compare(doc, worse)
+    assert regs and all(r.cell.startswith(list_archs()[0]) for r in regs)

@@ -76,7 +76,7 @@ def test_roofline_terms_and_bottleneck():
 
 def test_serving_param_specs_strip_fsdp():
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import serving_param_specs, param_specs
+    from repro.distributed.sharding import serving_param_specs
     from repro.models import param_shapes
     import jax
 

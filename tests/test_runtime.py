@@ -179,6 +179,7 @@ def test_coalescer_respects_irq_barrier_and_nonsequential_chains():
 # Scheduler: multi-channel drain vs oracle (acceptance criterion)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow  # >=4-channel drain/sim: CI slow job
 def test_four_channels_drain_irregular_transfers_bit_identical():
     rt = default_runtime(4, tier="serial", max_len=16, ring_capacity=32)
     rng = np.random.default_rng(7)
@@ -318,6 +319,7 @@ def test_channel_drain_via_pallas_kernel_matches_blocked_2d():
     np.testing.assert_array_equal(outs[True], outs[False])
 
 
+@pytest.mark.slow  # >=4-channel drain/sim: CI slow job
 def test_fused_2d_drain_across_channels():
     rng = np.random.default_rng(4)
     rows, unit = 32, 4
@@ -430,6 +432,7 @@ def test_multichannel_sim_one_channel_matches_base_config():
                                                       rel=0.05)
 
 
+@pytest.mark.slow  # >=4-channel drain/sim: CI slow job
 def test_multichannel_sim_scales_to_bus_saturation():
     two = simulate_multichannel(2, 13, 64, num_transfers=300)
     four = simulate_multichannel(4, 13, 64, num_transfers=300)
@@ -440,6 +443,7 @@ def test_multichannel_sim_scales_to_bus_saturation():
     assert max(utils) - min(utils) < 0.02   # fair arbiter: equal shares
 
 
+@pytest.mark.slow  # >=4-channel drain/sim: CI slow job
 def test_multichannel_sim_weighted_shares():
     r = simulate_multichannel(4, 13, 64, num_transfers=300,
                               weights=[4, 2, 1, 1])

@@ -91,7 +91,7 @@ def test_param_specs_cover_all_archs():
     """Every arch x mesh: specs build, divisible dims shard, rest replicate."""
     import numpy as np
     import jax
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.configs import get_config, list_archs
     from repro.distributed.sharding import param_specs
     from repro.models import param_shapes

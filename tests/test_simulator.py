@@ -1,5 +1,4 @@
 """Cycle simulator vs the paper's published claims (Figs 4-5, Tables II-IV)."""
-import numpy as np
 import pytest
 
 from repro.core import area_model as A

@@ -6,8 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
 
 from repro import optim
 from repro.checkpoint import Checkpointer
@@ -56,7 +54,6 @@ def test_schedule_warmup_and_decay():
 
 def test_training_reduces_loss_small_model():
     """End-to-end: a few steps of AdamW reduce loss on a fixed batch."""
-    from repro.models import loss_fn
     from repro.train import TrainConfig, init_state, train_step
     cfg = get_config("qwen2.5-3b", reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -1,10 +1,7 @@
 """End-to-end behaviour: the full train/serve paths with fault tolerance."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import optim
 from repro.configs import get_config
