@@ -20,7 +20,11 @@ import json
 import pathlib
 import sys
 
-from benchmarks import (
+# Runnable as `python benchmarks/run.py` from anywhere: the script's
+# parent (the repo root) must be importable for the benchmarks package.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import (  # noqa: E402
     bench_engine,
     bench_runtime,
     fig4_utilization,

@@ -1,0 +1,131 @@
+"""Wall-clock trend tracking: append BENCH_runtime wall-clock to a series.
+
+The perf gate deliberately excludes wall-clock launch latency — it is not
+deterministic, so gating it would make CI flaky (DESIGN.md §4). It still
+matters (the paper's 1.66x launch-latency claim is a wall-clock claim), so
+CI *tracks* it instead: every run appends the ``wall_clock`` section of
+``BENCH_runtime.json`` to a JSON-lines series that is cached between runs
+and uploaded as an artifact (``wall_clock_trend.jsonl``).
+
+Sustained drift produces a GitHub ``::warning::`` annotation — visible on
+the run, never red: alerting, not gating.
+
+Usage::
+
+    python benchmarks/trend.py --bench BENCH_runtime.json \\
+        --series wall_clock_trend.jsonl [--sha SHA] [--run-id ID]
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import pathlib
+import sys
+from typing import List, Optional, Sequence
+
+#: The headline wall-clock scalar the drift alert watches.
+DRIFT_METRIC = "launch_us_per_descriptor_mean"
+#: Alert when the newest point exceeds the median of the trailing window
+#: by this factor in every one of the last ``DRIFT_RUNS`` runs.
+DRIFT_FACTOR = 1.5
+DRIFT_RUNS = 3
+DRIFT_WINDOW = 10
+
+
+def append_point(series_path: pathlib.Path, bench: dict, *,
+                 sha: str = "", run_id: str = "") -> dict:
+    """Append one observation; returns the appended record."""
+    wall = bench.get("runtime", {}).get("wall_clock") \
+        or bench.get("wall_clock")
+    if not wall:
+        # Search one level deep: run.py nests sections by benchmark name.
+        for section in bench.values():
+            if isinstance(section, dict) and "wall_clock" in section:
+                wall = section["wall_clock"]
+                break
+    if not wall:
+        raise SystemExit("no wall_clock section in the bench document")
+    record = {
+        "sha": sha,
+        "run_id": run_id,
+        "recorded_at":
+            datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "seed": bench.get("seed"),
+        "wall_clock": wall,
+    }
+    with open(series_path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return record
+
+
+def load_series(series_path: pathlib.Path) -> List[dict]:
+    if not series_path.exists():
+        return []
+    out = []
+    for line in series_path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            # A truncated cache restore must not kill trend tracking.
+            print(f"::warning::{series_path}: skipping corrupt line",
+                  file=sys.stderr)
+    return out
+
+
+def _metric(rec: dict) -> Optional[float]:
+    v = rec.get("wall_clock", {}).get(DRIFT_METRIC)
+    return float(v) if isinstance(v, (int, float)) else None
+
+
+def check_drift(series: List[dict]) -> Optional[str]:
+    """Alert text when the last DRIFT_RUNS points all sit DRIFT_FACTOR
+    above the trailing-window median — sustained drift, not one noisy run."""
+    points = [m for m in (_metric(r) for r in series) if m is not None]
+    if len(points) < DRIFT_RUNS + 1:
+        return None
+    recent = points[-DRIFT_RUNS:]
+    window = points[-(DRIFT_WINDOW + DRIFT_RUNS):-DRIFT_RUNS]
+    if not window:
+        return None
+    baseline = sorted(window)[len(window) // 2]
+    if baseline <= 0:
+        return None
+    if all(p > DRIFT_FACTOR * baseline for p in recent):
+        return (f"sustained wall-clock drift: last {DRIFT_RUNS} runs of "
+                f"{DRIFT_METRIC} ({', '.join(f'{p:.2f}' for p in recent)} us)"
+                f" all exceed {DRIFT_FACTOR}x the trailing median "
+                f"({baseline:.2f} us)")
+    return None
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Append BENCH_runtime wall-clock to a trend series "
+                    "and alert (never fail) on sustained drift.")
+    ap.add_argument("--bench", default="BENCH_runtime.json")
+    ap.add_argument("--series", default="wall_clock_trend.jsonl")
+    ap.add_argument("--sha", default="")
+    ap.add_argument("--run-id", default="")
+    args = ap.parse_args(argv)
+
+    bench = json.loads(pathlib.Path(args.bench).read_text())
+    series_path = pathlib.Path(args.series)
+    record = append_point(series_path, bench, sha=args.sha,
+                          run_id=args.run_id)
+    series = load_series(series_path)
+    print(f"appended point {len(series)} to {series_path}: "
+          f"{DRIFT_METRIC}={_metric(record)}")
+    alert = check_drift(series)
+    if alert:
+        # GitHub annotation — visible on the run, but exit 0: tracked,
+        # never gated (ROADMAP: wall-clock trend tracking).
+        print(f"::warning::{alert}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

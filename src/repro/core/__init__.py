@@ -40,3 +40,14 @@ from .simulator import (  # noqa: F401
 )
 from .area_model import area_kge, headline_fpga_savings, report  # noqa: F401
 from .prefetch import analytical_utilization, estimate_hit_rate  # noqa: F401
+from .speculation import (  # noqa: F401
+    DEFAULT_DEPTH,
+    DEFAULT_POLICY,
+    DEPTH_WINDOW,
+    AdaptiveDepth,
+    DepthController,
+    FixedDepth,
+    SpeculationPolicy,
+    as_policy,
+    static_depth,
+)

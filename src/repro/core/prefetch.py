@@ -15,6 +15,7 @@ import numpy as np
 
 from .descriptor import DESCRIPTOR_BYTES
 from .simulator import BUS_BYTES, PIPE, OURS_DESC_BEATS, ideal_utilization
+from .speculation import DEFAULT_DEPTH, PolicyLike, static_depth
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +28,7 @@ def analytical_utilization(
     transfer_bytes: int,
     mem_latency: int,
     *,
-    prefetch: int = 0,
+    prefetch: PolicyLike = 0,
     in_flight: int = 4,
     hit_rate: float = 1.0,
 ) -> AnalyticalPoint:
@@ -40,6 +41,10 @@ def analytical_utilization(
     * serialization (no prefetch / miss): descriptor round trip ``2L + 6``
     * slot rate (prefetch on): ``(2L + 6) / min(prefetch, in_flight)``
     """
+    # The closed-form model has no feedback path, so a policy contributes
+    # its static (initial) depth — the adaptive trajectory lives in the
+    # cycle simulator only.
+    prefetch = static_depth(prefetch)
     rt = 2 * mem_latency + PIPE + OURS_DESC_BEATS
     payload_beats = transfer_bytes // BUS_BYTES
     bus = OURS_DESC_BEATS + payload_beats
@@ -86,7 +91,8 @@ def speculation_breakeven(mem_latency: int, transfer_bytes: int) -> float:
     lo, hi = 0.0, 1.0
     for _ in range(20):
         mid = (lo + hi) / 2
-        u = analytical_utilization(transfer_bytes, mem_latency, prefetch=4,
+        u = analytical_utilization(transfer_bytes, mem_latency,
+                                   prefetch=DEFAULT_DEPTH,
                                    hit_rate=mid).utilization
         if u >= base.utilization:
             hi = mid

@@ -49,6 +49,15 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .speculation import (
+    DEFAULT_DEPTH,
+    DEPTH_WINDOW,
+    AdaptiveDepth,
+    FixedDepth,
+    PolicyLike,
+    as_policy,
+)
+
 BUS_BYTES = 8          # 64-bit data bus
 PIPE = 2               # fixed request+response pipeline stages
 DESC_BYTES = 32        # our 256-bit descriptor
@@ -69,11 +78,22 @@ def ideal_utilization(n_bytes: int) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Compile-time parameters (paper Table I)."""
+    """Compile-time parameters (paper Table I).
+
+    ``prefetch`` names the frontend's speculation *policy*: either the
+    legacy integer slot count (coerced to
+    :class:`repro.core.speculation.FixedDepth`, bit-for-bit identical) or
+    any :class:`repro.core.speculation.SpeculationPolicy`. The simulator
+    instantiates a fresh controller per run and — for adaptive policies —
+    re-evaluates the depth every
+    :data:`repro.core.speculation.DEPTH_WINDOW` committed descriptors from
+    its *own* measured hit rate (the frontend is the measurer; the policy
+    is the decider).
+    """
 
     name: str
     in_flight: int = 4
-    prefetch: int = 0          # speculation slots; 0 disables
+    prefetch: PolicyLike = 0   # speculation policy; int n == FixedDepth(n)
     logicore: bool = False     # behavioural LogiCORE IP DMA model
 
     @staticmethod
@@ -82,11 +102,22 @@ class SimConfig:
 
     @staticmethod
     def speculation() -> "SimConfig":
-        return SimConfig("speculation", in_flight=4, prefetch=4)
+        return SimConfig("speculation", in_flight=4, prefetch=DEFAULT_DEPTH)
 
     @staticmethod
     def scaled() -> "SimConfig":
         return SimConfig("scaled", in_flight=24, prefetch=24)
+
+    @staticmethod
+    def adaptive(policy: Optional[AdaptiveDepth] = None) -> "SimConfig":
+        p = policy or AdaptiveDepth()
+        return SimConfig("adaptive", in_flight=p.max_depth, prefetch=p)
+
+    @staticmethod
+    def fixed(depth: int = DEFAULT_DEPTH) -> "SimConfig":
+        """Fixed-depth frontend via the policy layer (== speculation())."""
+        return SimConfig(f"fixed{depth}", in_flight=4,
+                         prefetch=FixedDepth(depth))
 
     @staticmethod
     def logicore_ip() -> "SimConfig":
@@ -116,6 +147,9 @@ class SimResult:
     rf_rb: float           # descriptor-fetch round trip (Table IV)
     i_rf: int
     r_w: int
+    # Speculation-policy trajectory (constant for FixedDepth frontends).
+    final_depth: int = 0
+    mean_depth: float = 0.0
 
 
 class _Bus:
@@ -143,7 +177,11 @@ def _simulate_ours(
     rng = np.random.default_rng(seed)
     bus = _Bus(mem_latency)
     payload_beats_each = max(1, transfer_bytes // BUS_BYTES)
-    spec_on = cfg.prefetch > 0
+    spec = as_policy(cfg.prefetch).make_controller()
+    cur_depth = spec.depth
+    spec_on = spec.enabled
+    depth_sum, depth_n = cur_depth, 1    # trajectory stats (per window)
+    window_hits = window_n = 0           # the frontend's own measurement
 
     next_known = np.zeros(num_transfers)   # cycle `next` field arrives
     desc_end = np.zeros(num_transfers)     # cycle descriptor fully arrived
@@ -174,7 +212,7 @@ def _simulate_ours(
         the issue time follows the previous issue, not data arrival.
         """
         nonlocal last_spec_issue, last_spec_pos
-        while (len(spec_queue) < cfg.prefetch
+        while (len(spec_queue) < cur_depth
                and last_spec_pos + 1 < num_transfers
                and (last_spec_pos + 1) - committed <= cfg.in_flight):
             pos = last_spec_pos + 1
@@ -197,7 +235,14 @@ def _simulate_ours(
         # (issue = next_known[k-1]) and its speculative successors
         # (issue+1, ...) strictly precede the payload launch for k-1
         # (issue = desc_end[k-1] + 1 = next_known[k-1] + 3).
-        if spec_on and spec_queue and rng.random() < hit_rate:
+        speculated = spec_on and bool(spec_queue)
+        hit = bool(speculated and rng.random() < hit_rate)
+        if speculated:
+            # The frontend measures its own §II-C hit rate: one observation
+            # per chain boundary where speculation was actually in flight.
+            window_n += 1
+            window_hits += int(hit)
+        if hit:
             pos, t_issue, nk, end = spec_queue.popleft()
             assert pos == k
             next_known[k] = max(nk, next_known[k - 1])
@@ -207,7 +252,7 @@ def _simulate_ours(
             # Commit frees a speculation slot.
             top_up_spec(next_known[k], committed=k + 1)
         else:
-            if spec_on and spec_queue:
+            if speculated:
                 # Mispredict: discard outstanding speculative data (its bus
                 # beats were already consumed = pure contention), re-issue
                 # the true fetch in the same cycle `next` arrived.
@@ -222,6 +267,14 @@ def _simulate_ours(
                 top_up_spec(t_issue + 1, committed=k)
             _, payload_end[k - 1] = bus.fetch(desc_end[k - 1] + 1,
                                               payload_beats_each)
+        if window_n >= DEPTH_WINDOW:
+            # Chain boundary: the measured window feeds the policy. A new
+            # depth only affects future top-ups — fetches already
+            # outstanding drain under the depth that issued them.
+            cur_depth = spec.observe(window_hits / window_n)
+            depth_sum += cur_depth
+            depth_n += 1
+            window_hits = window_n = 0
 
     _, payload_end[num_transfers - 1] = bus.fetch(
         desc_end[num_transfers - 1] + 1, payload_beats_each)
@@ -240,6 +293,7 @@ def _simulate_ours(
         desc_beats=desc_beats_total, wasted_beats=int(wasted_beats),
         # Table IV probes single-transfer latency: the uncongested first fetch.
         rf_rb=float(rf_rb_first), i_rf=OURS_I_RF, r_w=R_W,
+        final_depth=cur_depth, mean_depth=depth_sum / depth_n,
     )
 
 

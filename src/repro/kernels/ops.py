@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.speculation import DEFAULT_POLICY, PolicyLike, static_depth
+
 from . import ref  # noqa: F401  (re-exported oracles)
 from .descriptor_copy import chain_copy, descriptor_copy
 from .flash_attention import flash_attention
@@ -50,6 +52,16 @@ def moe_combine_op(inv_slot, inv_weight, expert_out):
                        interpret=_interpret())
 
 
-def prefetched_chain_copy_op(src_idx, dst_idx, src, dst, depth: int = 4):
-    return prefetched_chain_copy(src_idx, dst_idx, src, dst, depth=depth,
+def prefetched_chain_copy_op(src_idx, dst_idx, src, dst,
+                             depth: "PolicyLike | None" = None):
+    """Chain copy through the explicit prefetch pipeline (§II-C).
+
+    ``depth`` accepts the legacy int, any
+    :class:`repro.core.speculation.SpeculationPolicy`, or ``None`` for the
+    shared :data:`repro.core.speculation.DEFAULT_POLICY` — the same source
+    of truth the cycle simulator's speculation config uses, so the kernel
+    and the simulator cannot silently diverge.
+    """
+    resolved = static_depth(DEFAULT_POLICY if depth is None else depth)
+    return prefetched_chain_copy(src_idx, dst_idx, src, dst, depth=resolved,
                                  interpret=_interpret())

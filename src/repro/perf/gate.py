@@ -26,9 +26,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import sys
 from typing import Dict, List, Optional, Sequence
 
+from .serve_cell import SERVE_GATED_METRICS
 from .sweep import (
     GATED_METRICS,
     SCHEMA_VERSION,
@@ -48,6 +50,13 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
     "launch_cycles_per_transfer": 0.05,
     "coalesce_merge_ratio": 0.03,
     "speculation_hit_rate": 0.03,
+    "spec_bus_utilization_fixed4": 0.03,
+    "spec_bus_utilization_adaptive": 0.03,
+    # Serve-path scheduling metrics are small-integer ratios: identical on
+    # an unchanged tree, so the band only absorbs intentional re-scoping.
+    "admission_stall_rate": 0.10,
+    "completion_poll_latency_steps": 0.10,
+    "serve_steps_per_request": 0.05,
 }
 
 #: +1 -> higher is better (regression = drop); -1 -> lower is better.
@@ -56,7 +65,20 @@ METRIC_POLARITY: Dict[str, int] = {
     "launch_cycles_per_transfer": -1,
     "coalesce_merge_ratio": +1,
     "speculation_hit_rate": +1,
+    "spec_bus_utilization_fixed4": +1,
+    "spec_bus_utilization_adaptive": +1,
+    "admission_stall_rate": -1,
+    "completion_poll_latency_steps": -1,
+    "serve_steps_per_request": -1,
 }
+
+ALL_GATED_METRICS = tuple(GATED_METRICS) + tuple(SERVE_GATED_METRICS)
+
+
+def metrics_for_cell(cell: Dict[str, object]) -> Sequence[str]:
+    """The gated metric set a cell must carry, by cell kind."""
+    return (SERVE_GATED_METRICS if cell.get("kind") == "serve"
+            else GATED_METRICS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,7 +167,7 @@ def compare(
                 f"cell {key}: baseline cell has no metrics dict — the "
                 "baseline document is malformed; regenerate it")
         cur_metrics = cur.get("metrics", {})
-        for metric in GATED_METRICS:
+        for metric in metrics_for_cell(cell):
             if metric not in base_metrics:
                 raise GateError(
                     f"cell {key}: gated metric {metric!r} missing from "
@@ -185,8 +207,11 @@ def quick_subset(doc: Dict[str, object]):
     dims = doc["dimensions"]
     ch = [c for c in dims["channel_counts"] if c in _QUICK_CHANNELS]
     lat = [m for m in dims["mem_latencies"] if m in _QUICK_LATENCIES]
+    # Serve cells are already reduced-config; the quick sweep always runs
+    # them, so they always stay gated.
     cells = {k: c for k, c in doc["cells"].items()
-             if c.get("channels") in ch and c.get("mem_latency") in lat}
+             if c.get("kind") == "serve"
+             or (c.get("channels") in ch and c.get("mem_latency") in lat)}
     if not cells:
         raise GateError(
             "--quick: baseline has no cells in the quick dimensions "
@@ -198,6 +223,47 @@ def quick_subset(doc: Dict[str, object]):
     return out, len(doc["cells"]) - len(cells)
 
 
+def speculation_summary(doc: Dict[str, object]) -> str:
+    """Adaptive-vs-fixed utilization delta, per workload and overall.
+
+    Printed with every gate verdict (and into the CI job summary): the
+    live evidence for the §II-C adaptive-policy claim — adaptive matches
+    fixed-depth-4 on sequential streams and beats it on MoE dispatch
+    storms (DESIGN.md §5).
+    """
+    per_workload: Dict[str, List[float]] = {}
+    for cell in doc["cells"].values():
+        m = cell.get("metrics", {})
+        fixed = m.get("spec_bus_utilization_fixed4")
+        adaptive = m.get("spec_bus_utilization_adaptive")
+        if fixed is None or adaptive is None:
+            continue
+        delta = (adaptive - fixed) / max(abs(fixed), 1e-12)
+        per_workload.setdefault(cell.get("workload", "?"), []).append(delta)
+    if not per_workload:
+        return "speculation: no adaptive-vs-fixed cells in this document"
+    lines = ["speculation: adaptive vs fixed-depth-4 bus utilization"]
+    all_deltas: List[float] = []
+    for wl in sorted(per_workload):
+        ds = per_workload[wl]
+        all_deltas.extend(ds)
+        lines.append(f"  {wl:<14} mean {sum(ds) / len(ds):+8.1%}  "
+                     f"min {min(ds):+8.1%}  ({len(ds)} cells)")
+    lines.append(f"  {'overall':<14} mean "
+                 f"{sum(all_deltas) / len(all_deltas):+8.1%}")
+    return "\n".join(lines)
+
+
+def _emit_summary(doc: Dict[str, object]) -> None:
+    text = speculation_summary(doc)
+    print(text)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("### Perf gate — adaptive vs fixed speculation\n\n"
+                    "```\n" + text + "\n```\n")
+
+
 def _parse_tolerances(pairs: Sequence[str]) -> Dict[str, float]:
     out: Dict[str, float] = {}
     for p in pairs:
@@ -205,9 +271,10 @@ def _parse_tolerances(pairs: Sequence[str]) -> Dict[str, float]:
             raise GateError(
                 f"--tolerance expects metric=fraction, got {p!r}")
         k, v = p.split("=", 1)
-        if k not in GATED_METRICS:
+        if k not in ALL_GATED_METRICS:
             raise GateError(
-                f"--tolerance: unknown metric {k!r}; have {GATED_METRICS}")
+                f"--tolerance: unknown metric {k!r}; "
+                f"have {ALL_GATED_METRICS}")
         try:
             out[k] = float(v)
         except ValueError:
@@ -275,6 +342,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"GATE ERROR: {e}", file=sys.stderr)
         return 2
 
+    _emit_summary(current)
     n = len(baseline["cells"])
     if regressions:
         for r in regressions:

@@ -12,6 +12,21 @@ Each cell runs twice, once in each substrate:
    reproduces the cell's bus behaviour (N frontends, fair arbiter, the
    cell's memory latency) at the workload's representative transfer size,
    yielding steady-state bus utilization and launch cycles per transfer.
+3. **Speculation-policy pass** — the single-frontend cycle model runs the
+   cell's traffic (its measured §II-C hit rate) under both a
+   ``FixedDepth(4)`` and an ``AdaptiveDepth`` frontend, gating the
+   contention-discounted utilizations ``spec_bus_utilization_fixed4`` /
+   ``spec_bus_utilization_adaptive`` (DESIGN.md §5): steady-state
+   utilization scaled by useful-payload share of *all* descriptor traffic
+   including discarded speculative fetches, normalized so a zero-waste run
+   reports plain utilization. This is the adaptive-vs-fixed contract: the
+   adaptive policy must match fixed depth on sequential streams and beat
+   it on MoE dispatch storms, where backing off converts wasted
+   speculative beats back into payload bandwidth.
+
+One additional **serve cell** (``kind: "serve"``) runs a reduced-config
+end-to-end :class:`repro.serve.ServeEngine` and gates continuous-batching
+scheduling metrics; see :mod:`repro.perf.serve_cell`.
 
 The output document (``BENCH_perf.json``) is *bit-for-bit reproducible*
 from ``(mode, seed)``: gated metrics are medians over ``repeats`` seeded
@@ -32,19 +47,41 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, list_archs
-from repro.core.simulator import simulate_multichannel
+from repro.core.simulator import SimConfig, simulate, simulate_multichannel
+from repro.core.speculation import DEFAULT_DEPTH, FixedDepth
 from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
 
+from .serve_cell import (
+    DEFAULT_SERVE_SPEC,
+    SERVE_GATED_METRICS,
+    run_serve_cell,
+)
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
-SCHEMA_VERSION = 1
+#: v2: speculation-policy metrics (spec_bus_utilization_*) on every DMA
+#: cell, plus the end-to-end serve cell (kind: "serve"). Older baselines
+#: must be regenerated (DESIGN.md §4/§5).
+SCHEMA_VERSION = 2
 
-#: The gated perf surface. gate.py refuses documents missing any of these.
+#: The gated perf surface of DMA cells. gate.py refuses documents missing
+#: any of these (serve cells gate SERVE_GATED_METRICS instead).
 GATED_METRICS = (
     "bus_utilization",
     "launch_cycles_per_transfer",
     "coalesce_merge_ratio",
     "speculation_hit_rate",
+    "spec_bus_utilization_fixed4",
+    "spec_bus_utilization_adaptive",
+)
+
+#: Frontends of the speculation-policy pass. The fixed config is the
+#: paper's Table-I speculation point through the policy layer; the
+#: adaptive config deepens toward the scaled config's 24 slots on
+#: sequential streams and backs off toward one probing slot on storms.
+_SPEC_FRONTENDS = (
+    ("fixed4", SimConfig("spec-fixed4", in_flight=DEFAULT_DEPTH,
+                         prefetch=FixedDepth(DEFAULT_DEPTH))),
+    ("adaptive", SimConfig.adaptive()),
 )
 
 
@@ -59,6 +96,7 @@ class SweepSpec:
     workloads: Sequence[str]
     channel_counts: Sequence[int]
     mem_latencies: Sequence[int]
+    include_serve: bool = True
 
     @property
     def scale(self) -> Scale:
@@ -74,6 +112,7 @@ def default_spec(
     channel_counts: Optional[Sequence[int]] = None,
     mem_latencies: Optional[Sequence[int]] = None,
     repeats: Optional[int] = None,
+    include_serve: bool = True,
 ) -> SweepSpec:
     if mode not in SCALES:
         raise ValueError(f"unknown mode {mode!r}; have {sorted(SCALES)}")
@@ -88,6 +127,7 @@ def default_spec(
                              else ((4,) if quick else (1, 2, 4))),
         mem_latencies=tuple(mem_latencies if mem_latencies is not None
                             else ((13, 100) if quick else (1, 13, 100))),
+        include_serve=include_serve,
     )
 
 
@@ -134,12 +174,44 @@ def _run_runtime_pass(arch: str, workload: str, channels: int,
     }
 
 
+def _speculation_pass(mem_latency: int, transfer_bytes: int,
+                      hit_rate: float, num_transfers: int):
+    """Adaptive-vs-fixed cycle-model cells (DESIGN.md §5).
+
+    The gated metric is *contention-discounted* utilization: steady-state
+    utilization times the useful share of all descriptor traffic
+    (``payload / (payload + desc_beats)``, where ``desc_beats`` includes
+    discarded speculative fetches), normalized by the Eq.-1 ideal so a
+    zero-waste frontend reports its plain utilization. On a saturated
+    serving bus every wasted beat displaces a payload beat, which is
+    exactly what this discount charges for.
+    """
+    metrics: Dict[str, float] = {}
+    trajectory: Dict[str, Dict[str, float]] = {}
+    for label, cfg in _SPEC_FRONTENDS:
+        r = simulate(cfg, mem_latency, transfer_bytes,
+                     num_transfers=num_transfers, hit_rate=hit_rate)
+        useful = r.payload_beats / max(r.payload_beats + r.desc_beats, 1)
+        metrics[f"spec_bus_utilization_{label}"] = float(
+            r.utilization * useful / r.ideal)
+        trajectory[label] = {
+            "final_depth": int(r.final_depth),
+            "mean_depth": float(r.mean_depth),
+            "wasted_beats": int(r.wasted_beats),
+        }
+    return metrics, trajectory
+
+
 def run_sweep(spec: Optional[SweepSpec] = None, *,
               progress: bool = False) -> Dict[str, object]:
     """Execute the sweep; returns the BENCH_perf document (JSON-ready)."""
     spec = spec or default_spec()
     scale = spec.scale
     cells: Dict[str, Dict[str, object]] = {}
+    # The speculation pass depends only on (L, transfer size, hit rate) —
+    # all channel-independent — so memoize it across the channel axis, the
+    # same hoist the runtime pass gets across the latency axis.
+    spec_cache: Dict[tuple, tuple] = {}
 
     for arch in spec.archs:
         for workload in spec.workloads:
@@ -173,9 +245,15 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                     sim = simulate_multichannel(
                         channels, mem_latency, transfer_bytes,
                         num_transfers=scale.sim_transfers)
+                    spec_key = (mem_latency, transfer_bytes, hit,
+                                scale.sim_transfers)
+                    if spec_key not in spec_cache:
+                        spec_cache[spec_key] = _speculation_pass(*spec_key)
+                    spec_metrics, trajectory = spec_cache[spec_key]
                     total = channels * scale.sim_transfers
                     key = cell_key(arch, workload, channels, mem_latency)
                     cells[key] = {
+                        "kind": "dma",
                         "arch": arch,
                         "workload": workload,
                         "channels": channels,
@@ -187,14 +265,39 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                                 float(sim.cycles / total),
                             "coalesce_merge_ratio": merge,
                             "speculation_hit_rate": hit,
+                            **spec_metrics,
                         },
+                        "speculation": trajectory,
                         "counters": passes[0]["counters"],
                     }
                     if progress:
                         print(f"  {key}: "
                               f"util={cells[key]['metrics']['bus_utilization']:.3f} "
-                              f"merge={merge:.2f} hit={hit:.2f}",
+                              f"merge={merge:.2f} hit={hit:.2f} "
+                              f"spec(fixed4="
+                              f"{spec_metrics['spec_bus_utilization_fixed4']:.3f}, "
+                              f"adaptive="
+                              f"{spec_metrics['spec_bus_utilization_adaptive']:.3f})",
                               file=sys.stderr)
+
+    serve_cells = []
+    if spec.include_serve:
+        serve_spec = DEFAULT_SERVE_SPEC
+        serve_metrics, serve_counters = run_serve_cell(spec.seed, serve_spec)
+        serve_cells = [serve_spec.cell_key]
+        cells[serve_spec.cell_key] = {
+            "kind": "serve",
+            "arch": serve_spec.arch,
+            "workload": "serve",
+            "capacity": serve_spec.capacity,
+            "n_requests": serve_spec.n_requests,
+            "metrics": serve_metrics,
+            "counters": serve_counters,
+        }
+        if progress:
+            print(f"  {serve_spec.cell_key}: " + " ".join(
+                f"{k}={v:.3f}" for k, v in serve_metrics.items()),
+                file=sys.stderr)
 
     return {
         "schema_version": SCHEMA_VERSION,
@@ -206,8 +309,10 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
             "workloads": list(spec.workloads),
             "channel_counts": list(spec.channel_counts),
             "mem_latencies": list(spec.mem_latencies),
+            "serve_cells": serve_cells,
         },
         "gated_metrics": list(GATED_METRICS),
+        "serve_gated_metrics": list(SERVE_GATED_METRICS),
         "cells": cells,
     }
 
@@ -221,6 +326,7 @@ def spec_from_doc(doc: Dict[str, object]) -> SweepSpec:
         channel_counts=dims["channel_counts"],
         mem_latencies=dims["mem_latencies"],
         repeats=int(doc["repeats"]),
+        include_serve=bool(dims.get("serve_cells")),
     )
 
 

@@ -36,6 +36,7 @@ from repro.core.descriptor import (
     DescriptorArray,
     to_packed,
 )
+from repro.core.speculation import DEFAULT_POLICY, DepthController
 from repro.core.engine import (
     execute_blocked,
     execute_blocked_2d,
@@ -86,20 +87,45 @@ class ChannelStats:
     ring_full_events: int = 0  # backpressure occurrences
     occupancy_peak: int = 0    # ring high-water mark (slots in use)
     drain_seconds: float = 0.0 # wall-clock spent executing batches
+    speculation_depth: int = 0 # live §II-C depth of this channel's policy
 
 
 class Channel:
-    def __init__(self, cfg: ChannelConfig, completion: CompletionQueue):
+    def __init__(self, cfg: ChannelConfig, completion: CompletionQueue,
+                 spec: Optional[DepthController] = None):
         self.cfg = cfg
         self.ring = SubmissionRing(cfg.ring_capacity)
         self.completion = completion
         self.pending: Deque[_Batch] = deque()
         self.stats = ChannelStats()
         self.probe: Optional[PerfProbe] = None  # set via DMARuntime.attach_probe
+        # Per-channel speculation controller (DESIGN.md §5): the coalescer
+        # asks it for layout slack before planning; the measured input hit
+        # rate of each submission feeds back through observe_speculation.
+        self.spec: DepthController = spec or DEFAULT_POLICY.make_controller()
+        self.stats.speculation_depth = self.spec.depth
 
     @property
     def name(self) -> str:
         return self.cfg.name
+
+    @property
+    def speculation_depth(self) -> int:
+        """Live depth of this channel's speculation policy."""
+        return self.spec.depth
+
+    def observe_speculation(self, hit_rate: float) -> int:
+        """Close the §II-C feedback loop for one submission.
+
+        The *measurer* is the coalescer (input hit rate of the submitted
+        chain); the *decider* is the channel's policy controller. Depth may
+        change only here — between submissions, never mid-drain.
+        """
+        depth = self.spec.observe(hit_rate)
+        self.stats.speculation_depth = depth
+        if self.probe is not None:
+            self.probe.on_depth(self.name, depth)
+        return depth
 
     # -- submission ---------------------------------------------------------
     def can_accept(self, n_descriptors: int) -> bool:

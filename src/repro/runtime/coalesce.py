@@ -43,6 +43,9 @@ class CoalesceStats:
     split: int             # descriptors added by max_len splitting
     input_hit_rate: float  # §II-C hit rate of the chain as submitted
     output_hit_rate: float # hit rate after sequential layout (1.0 by constr.)
+    provisioned_slack: int = 0  # sequential-layout slack the speculation
+                                # policy asked for at plan time (0 = legacy
+                                # caller without a policy)
 
     @property
     def merge_ratio(self) -> float:
@@ -73,6 +76,7 @@ def coalesce(
     *,
     max_len: int,
     head: int = 0,
+    spec_depth: int = 0,
 ) -> Tuple[DescriptorArray, CoalesceStats]:
     """Plan a chain for submission: merge, split, sequential layout.
 
@@ -80,9 +84,21 @@ def coalesce(
     to ``d`` under serial chain semantics (same bytes moved in the same
     order), holds no descriptor longer than ``max_len``, and is chained
     ``0 -> 1 -> ... -> n-1`` (sequential layout).
+
+    ``spec_depth`` is the sequential-layout slack the caller's speculation
+    policy asked for (DESIGN.md §5): the planner must guarantee a §II-C
+    prefetcher with that many outstanding slots never fetches off a
+    sequential run. The full walk-order layout satisfies any depth by
+    construction, so the depth is recorded in
+    :attr:`CoalesceStats.provisioned_slack` (the planner's side of the
+    feedback contract) rather than changing the plan; it never alters the
+    planned chain, keeping ``FixedDepth`` callers bit-identical to the
+    pre-policy planner.
     """
     if max_len < 1:
         raise ValueError("max_len must be >= 1")
+    if spec_depth < 0:
+        raise ValueError("spec_depth must be >= 0")
     n_in = d.num_descriptors
     order, src, dst, ln, cfg = _chain_order_fields(d, head)
     in_hit = estimate_hit_rate(
@@ -140,7 +156,8 @@ def coalesce(
     if not o_src:   # fully-sentinel input: keep a well-formed empty chain
         planned = DescriptorArray.create(
             np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.int64))
-        stats = CoalesceStats(n_in, 0, merged, split, in_hit, 1.0)
+        stats = CoalesceStats(n_in, 0, merged, split, in_hit, 1.0,
+                              provisioned_slack=spec_depth)
         return planned, stats
 
     # -- sequential layout: 0 -> 1 -> ... -> -1 (hits by construction) -----
@@ -158,5 +175,6 @@ def coalesce(
         split=split,
         input_hit_rate=in_hit,
         output_hit_rate=estimate_hit_rate(out_addrs),
+        provisioned_slack=spec_depth,
     )
     return planned, stats

@@ -14,7 +14,14 @@ drain batches — not re-derive those numbers from its own bookkeeping. A
 * ``Channel.drain_one`` / ``DMARuntime._execute_fused``
                           — drained descriptor counts and drain seconds
                             (fused batches credited per channel);
-* ``ServeEngine.step``    — active-slot occupancy and step seconds.
+* ``Channel.observe_speculation``
+                          — speculation-policy depth updates (live depth,
+                            update count, peak/floor — DESIGN.md §5);
+* ``ServeEngine.step``    — active-slot occupancy, step seconds, and
+                            admission stalls (queued requests, no slot);
+* ``ServeEngine.poll_completed``
+                          — completion events with §II-D writeback ->
+                            poll latency in decode steps.
 
 Probes never change behaviour: every hook is a no-op when no probe is
 attached, and a probe failure is a bug, not a recoverable condition (no
@@ -43,6 +50,13 @@ class ChannelCounters:
     occupancy_peak: int = 0          # ring high-water mark (slots in use)
     hit_rate_sum: float = 0.0        # §II-C input hit rate, summed
     hit_rate_n: int = 0
+    # Speculation-policy trajectory (DESIGN.md §5): live depth after the
+    # last observation, number of feedback updates, and the extremes the
+    # policy visited while this probe was attached.
+    speculation_depth: int = 0
+    depth_updates: int = 0
+    depth_peak: int = 0
+    depth_floor: int = 0
 
     @property
     def merge_ratio(self) -> float:
@@ -61,6 +75,8 @@ class ServeCounters:
     step_seconds: float = 0.0
     active_slot_steps: int = 0       # sum of busy slots over steps
     completions_observed: int = 0    # requests seen via §II-D writeback
+    admission_stalls: int = 0        # steps with queued requests but no slot
+    poll_latency_steps_sum: int = 0  # §II-D writeback -> poll observation
 
 
 class PerfProbe:
@@ -98,6 +114,16 @@ class PerfProbe:
     def on_ring_full(self, channel: str) -> None:
         self._ch(channel).ring_full_events += 1
 
+    def on_depth(self, channel: str, depth: int) -> None:
+        """One speculation-policy feedback update (post-observation depth)."""
+        c = self._ch(channel)
+        c.speculation_depth = depth
+        c.depth_peak = depth if c.depth_updates == 0 \
+            else max(c.depth_peak, depth)
+        c.depth_floor = depth if c.depth_updates == 0 \
+            else min(c.depth_floor, depth)
+        c.depth_updates += 1
+
     def on_drain(self, channel: str, *, n_descriptors: int, seconds: float,
                  fused: bool = False) -> None:
         c = self._ch(channel)
@@ -112,8 +138,15 @@ class PerfProbe:
         self.serve.active_slot_steps += active_slots
         self.serve.step_seconds += seconds
 
-    def on_serve_completion(self, n: int = 1) -> None:
+    def on_serve_completion(self, n: int = 1,
+                            latency_steps: Optional[int] = None) -> None:
         self.serve.completions_observed += n
+        if latency_steps is not None:
+            self.serve.poll_latency_steps_sum += latency_steps
+
+    def on_admission_stall(self) -> None:
+        """One engine step that left requests queued behind full slots."""
+        self.serve.admission_stalls += 1
 
     # -- export --------------------------------------------------------------
     def snapshot(self) -> Dict[str, object]:

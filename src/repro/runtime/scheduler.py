@@ -32,6 +32,12 @@ import numpy as np
 
 from repro.core.descriptor import CONFIG_IRQ_ENABLE, DescriptorArray
 from repro.core.engine import execute_blocked_2d
+from repro.core.speculation import (
+    DEFAULT_POLICY,
+    PolicyLike,
+    SpeculationPolicy,
+    as_policy,
+)
 
 from .channel import (
     Channel,
@@ -90,14 +96,22 @@ class DMARuntime:
         arbitration: str = "round_robin",   # "round_robin" | "weighted"
         backpressure: str = "block",        # "block" | "spill"
         coalesce_max_len: int = 1 << 20,
+        speculation: Optional[PolicyLike] = None,
     ):
         if not channels:
             raise ValueError("need at least one channel")
         if backpressure not in ("block", "spill"):
             raise ValueError(f"unknown backpressure policy {backpressure!r}")
+        # One speculation policy per runtime, one *controller* per channel:
+        # each channel adapts to its own traffic (DESIGN.md §5). The default
+        # FixedDepth policy reproduces the pre-policy runtime bit-for-bit.
+        self.speculation: SpeculationPolicy = as_policy(
+            DEFAULT_POLICY if speculation is None else speculation)
         self.completion = CompletionQueue()
         self.channels: Dict[str, Channel] = {
-            c.name: Channel(c, self.completion) for c in channels}
+            c.name: Channel(c, self.completion,
+                            spec=self.speculation.make_controller())
+            for c in channels}
         if arbitration == "round_robin":
             self.arbiter = RoundRobinArbiter([c.name for c in channels])
         elif arbitration == "weighted":
@@ -185,10 +199,16 @@ class DMARuntime:
             max_len = (ch.cfg.max_len if ch.cfg.tier == "serial"
                        else min(ch.cfg.unit, self.coalesce_max_len)
                        if ch.cfg.tier == "blocked" else self.coalesce_max_len)
-            d, stats = coalesce(d, max_len=max_len)
+            # Ask-then-observe (DESIGN.md §5): the planner provisions the
+            # layout slack the channel's policy currently wants, then the
+            # measured input hit rate feeds back and may move the depth —
+            # for the *next* submission, never this one.
+            d, stats = coalesce(d, max_len=max_len,
+                                spec_depth=ch.speculation_depth)
             self.coalesce_in += stats.n_in
             self.coalesce_out += stats.n_out
             self._hit_rates.append(stats.input_hit_rate)
+            ch.observe_speculation(stats.input_hit_rate)
 
         n = d.num_descriptors
         if n == 0:
@@ -378,6 +398,12 @@ class DMARuntime:
     def poll(self, max_events: Optional[int] = None):
         return self.completion.poll(max_events)
 
+    # -- speculation ---------------------------------------------------------
+    def speculation_depths(self) -> Dict[str, int]:
+        """Live §II-C depth per channel (the policy's current decision)."""
+        return {name: ch.speculation_depth
+                for name, ch in self.channels.items()}
+
     # -- stats ---------------------------------------------------------------
     def stats(self) -> Dict[str, object]:
         per_channel = {
@@ -406,6 +432,7 @@ def default_runtime(
     ring_capacity: int = 64,
     arbitration: str = "round_robin",
     backpressure: str = "block",
+    speculation: Optional[PolicyLike] = None,
     **channel_kw,
 ) -> DMARuntime:
     """N homogeneous channels — the common serving configuration."""
@@ -413,4 +440,4 @@ def default_runtime(
                           ring_capacity=ring_capacity, **channel_kw)
             for i in range(n_channels)]
     return DMARuntime(cfgs, arbitration=arbitration,
-                      backpressure=backpressure)
+                      backpressure=backpressure, speculation=speculation)

@@ -74,6 +74,7 @@ class ServeEngine:
         self._tickets: Dict[int, int] = {}        # uid -> ring ticket
         self._ticket_uid: Dict[int, int] = {}     # ring ticket -> uid
         self._delivered: Dict[int, Request] = {}  # completion-event'd uids
+        self._completed_at: Dict[int, int] = {}   # uid -> step of writeback
         caches = init_decode_caches(cfg, capacity, max_len)
         self.state = DecodeState(
             caches, jnp.zeros((capacity,), jnp.int32))
@@ -83,6 +84,9 @@ class ServeEngine:
         self.probe: Optional[PerfProbe] = None
         self.step_seconds = 0.0
         self.active_slot_steps = 0
+        self.admission_stalls = 0          # steps with queued work, no slot
+        self.poll_latency_steps_sum = 0    # writeback -> poll observation
+        self.poll_latency_n = 0
 
     # -- instrumentation ---------------------------------------------------------
     def attach_probe(self, probe: Optional[PerfProbe]) -> None:
@@ -92,6 +96,7 @@ class ServeEngine:
 
     def perf_counters(self) -> Dict[str, float]:
         """Engine-side counters the perf sweep reads directly."""
+        depths = self.runtime.speculation_depths()
         return {
             "steps": self.steps,
             "step_seconds": self.step_seconds,
@@ -99,6 +104,17 @@ class ServeEngine:
             "mean_active_slots":
                 self.active_slot_steps / self.steps if self.steps else 0.0,
             "completed": len(self.completed),
+            "admission_stalls": self.admission_stalls,
+            "admission_stall_rate":
+                self.admission_stalls / self.steps if self.steps else 0.0,
+            "completion_poll_latency_steps":
+                (self.poll_latency_steps_sum / self.poll_latency_n
+                 if self.poll_latency_n else 0.0),
+            # Live §II-C speculation depth of the runtime under this engine
+            # (mean over channels; a single-policy runtime reports that
+            # policy's current decision).
+            "speculation_depth":
+                float(np.mean(list(depths.values()))) if depths else 0.0,
         }
 
     # -- API -------------------------------------------------------------------
@@ -125,8 +141,16 @@ class ServeEngine:
         for ticket in done_tickets:
             uid = self._ticket_uid.get(ticket)
             if uid is not None and uid in self.completed:
-                if uid not in self._delivered and self.probe is not None:
-                    self.probe.on_serve_completion()
+                if uid not in self._delivered:
+                    # Poll latency: decode steps between the §II-D
+                    # writeback and the scheduler observing it here.
+                    latency = self.steps - self._completed_at.get(
+                        uid, self.steps)
+                    self.poll_latency_steps_sum += latency
+                    self.poll_latency_n += 1
+                    if self.probe is not None:
+                        self.probe.on_serve_completion(
+                            latency_steps=latency)
                 self._delivered[uid] = self.completed[uid]
         return list(self._delivered.values())
 
@@ -179,6 +203,13 @@ class ServeEngine:
                 slot.request = self.queue.popleft()
                 slot.prompt_cursor = 0
                 self._reset_slot_caches(b)
+        if self.queue:
+            # Admission stall: requests are waiting but every slot is busy
+            # — the continuous-batching pressure signal the perf sweep
+            # gates (DESIGN.md §5).
+            self.admission_stalls += 1
+            if self.probe is not None:
+                self.probe.on_admission_stall()
 
     def step(self) -> None:
         t0 = time.perf_counter()
@@ -224,6 +255,7 @@ class ServeEngine:
                         or int(cur[b]) >= self.max_len - 1)
             if finished:
                 self.completed[r.uid] = r
+                self._completed_at[r.uid] = self.steps + 1  # post-step index
                 # §II-D completion writeback: first 8 bytes -> all ones,
                 # applied to the request's ring slot through the runtime.
                 self.runtime.complete(self._tickets[r.uid])

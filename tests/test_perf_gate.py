@@ -29,14 +29,18 @@ def _doc(cells=None):
         "seed": 0,
         "repeats": 3,
         "dimensions": {"archs": ["archA"], "workloads": ["paged_kv"],
-                       "channel_counts": [4], "mem_latencies": [13]},
+                       "channel_counts": [4], "mem_latencies": [13],
+                       "serve_cells": []},
         "gated_metrics": list(gate.GATED_METRICS),
+        "serve_gated_metrics": list(gate.SERVE_GATED_METRICS),
         "cells": cells,
     }
 
 
-def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95):
+def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95,
+          spec_fixed=0.6, spec_adaptive=0.62):
     return {
+        "kind": "dma",
         "arch": "archA", "workload": "paged_kv",
         "channels": 4, "mem_latency": 13,
         "metrics": {
@@ -44,6 +48,25 @@ def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95):
             "launch_cycles_per_transfer": launch,
             "coalesce_merge_ratio": merge,
             "speculation_hit_rate": hit,
+            "spec_bus_utilization_fixed4": spec_fixed,
+            "spec_bus_utilization_adaptive": spec_adaptive,
+        },
+        "counters": {},
+    }
+
+
+SERVE_CELL = "serve/archA/cap2"
+
+
+def _serve_cell(stall=0.5, poll=1.0, steps=4.0):
+    return {
+        "kind": "serve",
+        "arch": "archA", "workload": "serve",
+        "capacity": 2, "n_requests": 6,
+        "metrics": {
+            "admission_stall_rate": stall,
+            "completion_poll_latency_steps": poll,
+            "serve_steps_per_request": steps,
         },
         "counters": {},
     }
@@ -103,6 +126,56 @@ def test_tolerance_override():
     assert len(gate.compare(base, cur)) == 1
     assert gate.compare(base, cur,
                         tolerances={"bus_utilization": 0.10}) == []
+
+
+# ---------------------------------------------------------------------------
+# Serve cells gate their own metric set
+# ---------------------------------------------------------------------------
+
+def test_serve_cell_gates_serve_metrics_with_lower_is_better():
+    base = _doc(cells={CELL: _cell(), SERVE_CELL: _serve_cell()})
+    worse = _doc(cells={CELL: _cell(),
+                        SERVE_CELL: _serve_cell(stall=0.7, poll=1.5)})
+    regs = gate.compare(base, worse)
+    assert sorted(r.metric for r in regs) == [
+        "admission_stall_rate", "completion_poll_latency_steps"]
+    better = _doc(cells={CELL: _cell(),
+                         SERVE_CELL: _serve_cell(stall=0.1, steps=2.0)})
+    assert gate.compare(base, better) == []
+
+
+def test_serve_cell_missing_serve_metric_errors():
+    base = _doc(cells={SERVE_CELL: _serve_cell()})
+    cur = _doc(cells={SERVE_CELL: _serve_cell()})
+    del cur["cells"][SERVE_CELL]["metrics"]["admission_stall_rate"]
+    with pytest.raises(gate.GateError,
+                       match="admission_stall_rate.*missing from current"):
+        gate.compare(base, cur)
+
+
+def test_serve_cell_does_not_require_dma_metrics():
+    """A serve cell carries no bus_utilization — must not error."""
+    base = _doc(cells={SERVE_CELL: _serve_cell()})
+    assert gate.compare(base, copy.deepcopy(base)) == []
+
+
+def test_quick_subset_always_keeps_serve_cells():
+    doc = _full_doc()
+    doc["cells"][SERVE_CELL] = _serve_cell()
+    sub, dropped = gate.quick_subset(doc)
+    assert SERVE_CELL in sub["cells"]
+    assert dropped == 3
+
+
+def test_speculation_summary_names_workload_deltas():
+    doc = _doc(cells={
+        CELL: _cell(spec_fixed=0.5, spec_adaptive=0.6),
+        "archA/moe_dispatch/ch4/L13": dict(
+            _cell(spec_fixed=0.2, spec_adaptive=0.3), workload="moe_dispatch"),
+    })
+    text = gate.speculation_summary(doc)
+    assert "paged_kv" in text and "moe_dispatch" in text
+    assert "+20.0%" in text and "+50.0%" in text
 
 
 # ---------------------------------------------------------------------------
@@ -283,14 +356,28 @@ def test_cli_update_baseline_rewrites_file(tmp_path):
 # End-to-end: real sweep, real injected regression
 # ---------------------------------------------------------------------------
 
-def _mini_spec():
+def _mini_spec(include_serve=False):
     return default_spec("quick", 0, archs=[list_archs()[0]],
                         workloads=["paged_kv"], channel_counts=[2],
-                        mem_latencies=[100], repeats=2)
+                        mem_latencies=[100], repeats=2,
+                        include_serve=include_serve)
 
 
 def test_end_to_end_unchanged_tree_passes(tmp_path):
     doc = run_sweep(_mini_spec())
+    p = str(tmp_path / "BENCH_perf.json")
+    write_doc(doc, p)
+    assert gate.main(["--baseline", p]) == 0
+
+
+@pytest.mark.slow
+def test_end_to_end_serve_cell_round_trips_through_gate(tmp_path):
+    """A sweep with the serve cell re-gates cleanly (deterministic
+    scheduling metrics) and spec_from_doc restores include_serve."""
+    doc = run_sweep(_mini_spec(include_serve=True))
+    serve_keys = [k for k, c in doc["cells"].items()
+                  if c.get("kind") == "serve"]
+    assert serve_keys and doc["dimensions"]["serve_cells"] == serve_keys
     p = str(tmp_path / "BENCH_perf.json")
     write_doc(doc, p)
     assert gate.main(["--baseline", p]) == 0

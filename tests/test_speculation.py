@@ -1,0 +1,174 @@
+"""The speculation-policy layer: FixedDepth ≡ legacy ints, adaptive dynamics.
+
+The hypothesis property suites are slow-marked (CI's tier-1 fast split
+skips them; the slow job runs them) and skip cleanly on minimal installs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, list_archs
+from repro.core.simulator import SimConfig, simulate
+from repro.core.speculation import (
+    DEFAULT_DEPTH,
+    DEFAULT_POLICY,
+    AdaptiveDepth,
+    FixedDepth,
+    as_policy,
+    static_depth,
+)
+from repro.perf.workloads import Scale, generate
+from repro.runtime import ChannelConfig, DMARuntime, coalesce
+
+TINY = Scale("tiny", n_bursts=1, burst_len=24, pool_elems=1 << 12,
+             max_len=128, ring_capacity=64, sim_transfers=60)
+
+
+# ---------------------------------------------------------------------------
+# Policy basics
+# ---------------------------------------------------------------------------
+
+def test_as_policy_coerces_ints_and_passes_policies_through():
+    p = as_policy(7)
+    assert isinstance(p, FixedDepth) and p.depth == 7
+    a = AdaptiveDepth()
+    assert as_policy(a) is a
+    with pytest.raises(TypeError):
+        as_policy("deep")
+    assert static_depth(3) == 3
+    assert static_depth(FixedDepth(0)) == 0
+    assert static_depth(AdaptiveDepth(initial_depth=6)) == 6
+
+
+def test_fixed_controller_ignores_observations():
+    c = FixedDepth(5).make_controller()
+    for h in (0.0, 1.0, 0.3):
+        assert c.observe(h) == 5
+    assert c.depth == 5 and c.enabled
+    assert not FixedDepth(0).make_controller().enabled
+
+
+def test_default_policy_matches_simulator_and_kernel_default():
+    """Single source of truth: SimConfig.speculation() and the kernels'
+    default depth both come from DEFAULT_POLICY."""
+    assert DEFAULT_POLICY.depth == DEFAULT_DEPTH == 4
+    assert SimConfig.speculation().prefetch == DEFAULT_DEPTH
+
+    import inspect
+    from repro.kernels import ops
+    sig = inspect.signature(ops.prefetched_chain_copy_op)
+    assert sig.parameters["depth"].default is None  # None -> DEFAULT_POLICY
+
+
+def test_adaptive_validation():
+    with pytest.raises(ValueError):
+        AdaptiveDepth(min_depth=0)
+    with pytest.raises(ValueError):
+        AdaptiveDepth(initial_depth=30, max_depth=24)
+    with pytest.raises(ValueError):
+        AdaptiveDepth(deepen_threshold=0.4, backoff_threshold=0.5)
+    with pytest.raises(ValueError):
+        AdaptiveDepth(backoff_hysteresis=0)
+
+
+def test_adaptive_deepens_on_sequential_and_backs_off_on_storms():
+    c = AdaptiveDepth().make_controller()
+    for _ in range(8):
+        c.observe(1.0)
+    assert c.depth == 24
+    for _ in range(16):
+        c.observe(0.0)
+    assert c.depth == 1
+    # recovery: the floor keeps one probing slot, so it can climb back
+    for _ in range(16):
+        c.observe(1.0)
+    assert c.depth == 24
+
+
+def test_adaptive_hysteresis_absorbs_one_bad_window():
+    p = AdaptiveDepth(backoff_hysteresis=2, alpha=1.0)
+    c = p.make_controller()
+    for _ in range(4):
+        c.observe(1.0)
+    top = c.depth
+    c.observe(0.0)       # one misprediction burst...
+    assert c.depth == top  # ...does not move the depth
+    c.observe(0.0)       # a second consecutive bad window does
+    assert c.depth == top // 2
+
+
+# ---------------------------------------------------------------------------
+# FixedDepth ≡ legacy integer behaviour, bit for bit
+# ---------------------------------------------------------------------------
+
+def _strip(r):
+    d = dataclasses.asdict(r)
+    d.pop("config")
+    d.pop("final_depth")
+    d.pop("mean_depth")
+    return d
+
+
+@pytest.mark.parametrize("depth,in_flight", [(0, 4), (4, 4), (24, 24)])
+@pytest.mark.parametrize("latency", [1, 13, 100])
+def test_simulator_fixed_policy_equals_int_prefetch(depth, in_flight,
+                                                    latency):
+    for size in (64, 256):
+        for hit in (1.0, 0.6):
+            a = simulate(SimConfig("i", in_flight=in_flight, prefetch=depth),
+                         latency, size, num_transfers=256, hit_rate=hit,
+                         seed=11)
+            b = simulate(SimConfig("p", in_flight=in_flight,
+                                   prefetch=FixedDepth(depth)),
+                         latency, size, num_transfers=256, hit_rate=hit,
+                         seed=11)
+            assert _strip(a) == _strip(b)
+
+
+def _chain_fields(d):
+    return tuple(np.asarray(getattr(d, f)).tobytes()
+                 for f in ("src", "dst", "length", "nxt", "config"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list_archs())
+def test_fixed_policy_runtime_identical_on_registry_configs(arch):
+    """On all 10 registry archs, a FixedDepth runtime plans, executes and
+    reports exactly like the pre-policy runtime (whose behaviour is pinned
+    by coalesce() with spec_depth=0 and the committed baseline)."""
+    cfg = get_config(arch)
+    for workload in ("paged_kv", "moe_dispatch"):
+        wl = generate(workload, cfg, TINY, seed=0)
+        # coalescer: provisioning slack must never change the plan
+        for d in wl.chains:
+            legacy, s0 = coalesce(d, max_len=TINY.max_len)
+            planned, s1 = coalesce(d, max_len=TINY.max_len,
+                                   spec_depth=DEFAULT_DEPTH)
+            assert _chain_fields(legacy) == _chain_fields(planned)
+            assert s0.input_hit_rate == s1.input_hit_rate
+            assert s0.merge_ratio == s1.merge_ratio
+            assert s1.provisioned_slack == DEFAULT_DEPTH
+
+        # runtime: explicit FixedDepth == default-policy runtime, and the
+        # sim sees identical results through int or policy prefetch
+        import jax.numpy as jnp
+        stats = []
+        for speculation in (None, FixedDepth(DEFAULT_DEPTH)):
+            rt = DMARuntime(
+                [ChannelConfig(name="a", tier="serial",
+                               ring_capacity=TINY.ring_capacity,
+                               max_len=TINY.max_len)],
+                speculation=speculation)
+            rt.register_pool("src", jnp.zeros(TINY.pool_elems, jnp.float32))
+            rt.register_pool("dst", jnp.zeros(TINY.pool_elems, jnp.float32))
+            for d in wl.chains:
+                rt.submit(d, src_pool="src", dst_pool="dst", channel="a")
+            rt.drain_until_idle()
+            st = rt.stats()
+            stats.append((st["coalesce_merge_ratio"],
+                          st["mean_input_hit_rate"],
+                          st["channels"]["a"]["drained"],
+                          st["channels"]["a"]["speculation_depth"]))
+        assert stats[0] == stats[1]
+        assert stats[0][3] == DEFAULT_DEPTH   # fixed policy never moves

@@ -1,0 +1,69 @@
+"""Hypothesis property suites for the adaptive speculation controller.
+
+Slow-marked (CI's tier-1 fast split skips them; the slow job runs them)
+and skipped entirely on minimal installs without hypothesis.
+"""
+import pytest
+
+from repro.core.speculation import AdaptiveDepth, FixedDepth
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=60)
+@given(st.data())
+def test_adaptive_converges_on_stationary_traffic(data):
+    """On stationary traffic the controller reaches a fixed point: the
+    depth stops changing, and lands on max_depth above the deepen
+    threshold / min_depth below the backoff threshold."""
+    p = AdaptiveDepth()
+    c = p.make_controller()
+    regime = data.draw(st.sampled_from(["good", "bad", "dead"]))
+    if regime == "good":
+        h = data.draw(st.floats(p.deepen_threshold, 1.0))
+        want = p.max_depth
+    elif regime == "bad":
+        h = data.draw(st.floats(0.0, p.backoff_threshold))
+        want = p.min_depth
+    else:
+        # strictly inside the dead band the depth never moves at all
+        h = data.draw(st.floats(p.backoff_threshold + 1e-6,
+                                p.deepen_threshold - 1e-6,
+                                exclude_min=True, exclude_max=True))
+        want = p.initial_depth
+    for _ in range(64):
+        c.observe(h)
+    settled = c.depth
+    assert settled == want
+    for _ in range(16):
+        c.observe(h)
+    assert c.depth == settled      # fixed point
+
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=60)
+@given(st.data())
+def test_adaptive_monotone_backoff_under_miss_streaks(data):
+    """During an injected miss streak the depth never increases — no
+    matter what traffic preceded the streak."""
+    c = AdaptiveDepth().make_controller()
+    for h in data.draw(st.lists(st.floats(0.0, 1.0), max_size=40)):
+        c.observe(h)
+    streak = data.draw(st.integers(1, 40))
+    prev = c.depth
+    for _ in range(streak):
+        d = c.observe(0.0)
+        assert d <= prev
+        prev = d
+
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=60)
+@given(st.integers(0, 32), st.lists(st.floats(0.0, 1.0), max_size=60))
+def test_fixed_depth_invariant_under_any_observation_stream(depth, stream):
+    c = FixedDepth(depth).make_controller()
+    for h in stream:
+        assert c.observe(h) == depth
+    assert c.depth == depth
