@@ -1,0 +1,37 @@
+"""Sharded-runtime benchmarks: per-mesh migration cells for
+BENCH_runtime.json (DESIGN.md §6).
+
+One entry per mesh size in {1, 2, 4, 8} — the same cell spec and seeds
+the perf sweep gates in BENCH_perf.json, but a *single* repeat, so any
+metric downstream of the repeat median can differ from the gated
+document (including the cycle model, whose cross_fraction input is that
+median). The gated copies live in BENCH_perf.json; here they are
+*reported*, with the wall-clock migration drain time isolated under
+``wall_clock``, which never enters the deterministic section.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.perf.sharded_cell import (
+    DEFAULT_SHARDED_SPEC,
+    MESH_SIZES,
+    run_sharded_cell,
+)
+
+
+def run(csv_rows: list, seed: int = 0) -> dict:
+    cells = {}
+    wall = {}
+    for mesh in MESH_SIZES:
+        t0 = time.perf_counter()
+        metrics, counters = run_sharded_cell(seed, mesh,
+                                             DEFAULT_SHARDED_SPEC,
+                                             repeats=1)
+        wall[f"mesh{mesh}_seconds"] = time.perf_counter() - t0
+        cells[f"mesh{mesh}"] = {"metrics": metrics, "counters": counters}
+        csv_rows.append((
+            f"sharded_migration_mesh{mesh}", 0.0,
+            f"cycles={metrics['cross_shard_migration_cycles']:.1f}/"
+            f"merge={metrics['migration_chain_merge_ratio']:.2f}"))
+    return {"cells": cells, "wall_clock": wall}

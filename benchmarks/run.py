@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -24,9 +25,40 @@ import sys
 # parent (the repo root) must be importable for the benchmarks package.
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
+
+def _apply_mesh_flag() -> None:
+    """Honor ``--mesh N`` before anything imports jax.
+
+    ``--xla_force_host_platform_device_count`` only takes effect if set
+    before the XLA backend initializes, so the flag is peeked off argv at
+    module import time (argparse validates it again later). The sharded
+    cells regenerate bit-for-bit with or without real devices — the flag
+    only controls whether shards get placed on a real CPU mesh, matching
+    what CI's sharded lane exercises.
+    """
+    argv = sys.argv[1:]
+    n = None
+    for i, tok in enumerate(argv):
+        try:
+            if tok == "--mesh" and i + 1 < len(argv):
+                n = int(argv[i + 1])
+            elif tok.startswith("--mesh="):
+                n = int(tok.split("=", 1)[1])
+        except ValueError:
+            return   # argparse will produce the real error message
+    if n is None:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = \
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
+
+_apply_mesh_flag()
+
 from benchmarks import (  # noqa: E402
     bench_engine,
     bench_runtime,
+    bench_sharded,
     fig4_utilization,
     fig5_hitrate,
     roofline,
@@ -48,9 +80,26 @@ def main(argv=None) -> int:
                     default="quick",
                     help="scenario-sweep size for BENCH_perf.json; "
                          "'skip' leaves the committed baseline untouched")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="emulate N host CPU devices "
+                         "(--xla_force_host_platform_device_count) so the "
+                         "sharded cells place shards on a real mesh, as "
+                         "CI's sharded lane does; cells regenerate "
+                         "bit-for-bit with or without it")
     ap.add_argument("--out-dir", type=pathlib.Path, default=REPO_ROOT,
                     help="where to write BENCH_*.json")
     args = ap.parse_args(argv)
+
+    if args.mesh:
+        import jax
+        if len(jax.devices()) < args.mesh:
+            # The pre-import peek reads sys.argv; a programmatic
+            # main(argv=...) call (or an already-initialized backend)
+            # cannot grow the device count retroactively — say so rather
+            # than silently running unplaced.
+            print(f"warning: --mesh {args.mesh} requested but only "
+                  f"{len(jax.devices())} devices are visible; shards run "
+                  "unplaced (metrics are unaffected)", file=sys.stderr)
 
     csv_rows: list = []
     fig4_utilization.run(csv_rows)
@@ -59,6 +108,7 @@ def main(argv=None) -> int:
     table4_latency.run(csv_rows)
     bench_engine.run(csv_rows)
     runtime_metrics = bench_runtime.run(csv_rows, seed=args.seed)
+    runtime_metrics["sharded"] = bench_sharded.run(csv_rows, seed=args.seed)
     roofline.run(csv_rows)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -376,6 +376,29 @@ class ChannelSimResult:
     desc_beats: int
     utilization: float     # this channel's payload beats / shared-bus cycles
     mean_launch_gap: float # cycles between consecutive launches on channel
+    shard: int = 0         # frontend group (0 for the unsharded model)
+
+
+@dataclasses.dataclass
+class ShardedBusResult:
+    """Cross-shard contention summary of a sharded multichannel run.
+
+    The per-shard local buses model a shard's own memory system; the
+    shared interconnect carries cross-shard page-migration payloads plus
+    one §II-D writeback beat per hop (the control-channel completion
+    riding along). ``migration_cycles_mean`` is the added cycles a
+    migrated transfer spends between finishing on its local bus and its
+    hop (payload + writeback) clearing the interconnect.
+    """
+
+    num_shards: int
+    per_shard_utilization: List[float]
+    mean_shard_utilization: float
+    cross_transfers: int
+    cross_fraction: float
+    interconnect_latency: int
+    migration_cycles_mean: float
+    interconnect_busy_beats: int
 
 
 @dataclasses.dataclass
@@ -386,42 +409,28 @@ class MultiChannelResult:
     ideal: float
     cycles: int
     channels: List[ChannelSimResult]
+    sharded: Optional[ShardedBusResult] = None
 
 
-def simulate_multichannel(
+def _multichannel_pass(
     num_channels: int,
-    mem_latency: int,
-    transfer_bytes: int,
-    *,
-    num_transfers: int = 500,
-    weights: Optional[List[int]] = None,
-    arbitration: str = "weighted_rr",
-) -> MultiChannelResult:
-    """N serialized frontends (base config) interleaved on one shared bus.
+    bus: _Bus,
+    payload_beats_each: int,
+    num_transfers: int,
+    weights: List[int],
+):
+    """One group of serialized frontends contending on one shared bus.
 
-    Each channel alone suffers the §II-A descriptor serialization (its next
-    fetch waits for the previous ``next`` field); the multi-channel runtime
-    hides that latency with *inter-channel* parallelism: while channel A
-    waits on its round trip, B..N own the bus. The arbiter is the smooth
-    weighted round-robin used by :class:`repro.runtime.WeightedArbiter`
-    (all-equal weights == fair RR, the paper's §III-A arbiter).
+    Returns per-channel launch times, payload end times, and beat counts;
+    callers build steady-state windows (and, for sharded runs, feed the
+    payload ends into the interconnect phase).
     """
-    if transfer_bytes % BUS_BYTES:
-        raise ValueError("paper evaluates bus-aligned transfer sizes")
-    if num_channels < 1:
-        raise ValueError("need >= 1 channel")
-    weights = list(weights) if weights else [1] * num_channels
-    if len(weights) != num_channels:
-        raise ValueError("one weight per channel")
-    del arbitration  # single policy today; named for config clarity
-    bus = _Bus(mem_latency)
-    payload_beats_each = max(1, transfer_bytes // BUS_BYTES)
-
     # Backlogged-channel model: offered load tracks weight, so every channel
     # stays busy across the whole measurement window and the reported
     # shares reflect arbitration, not early completion.
     remaining = np.asarray([num_transfers * w for w in weights])
     launches: List[List[float]] = [[] for _ in range(num_channels)]
+    ends: List[List[float]] = [[] for _ in range(num_channels)]
     desc_beats = np.zeros(num_channels, np.int64)
     payload_beats = np.zeros(num_channels, np.int64)
     credit = np.zeros(num_channels)
@@ -462,14 +471,27 @@ def simulate_multichannel(
             _, p_end = bus.fetch(t_issue, payload_beats_each)
             payload_beats[c] += payload_beats_each
             launches[c].append(t_issue)
+            ends[c].append(p_end)
             last_end = max(last_end, p_end)
 
-    # Steady-state window: middle half of the global launch sequence.
+    return launches, ends, desc_beats, payload_beats, last_end
+
+
+def _channel_results(
+    launches: List[List[float]],
+    desc_beats: np.ndarray,
+    payload_beats: np.ndarray,
+    payload_beats_each: int,
+    num_transfers: int,
+    weights: List[int],
+    shard_of: List[int],
+) -> Tuple[List[ChannelSimResult], float]:
+    """Per-channel utilization over the middle half of the global launches."""
     all_launch = np.sort(np.concatenate([np.asarray(l) for l in launches]))
     lo, hi = all_launch[len(all_launch) // 4], all_launch[3 * len(all_launch) // 4]
     window = max(hi - lo, 1e-9)
     chans = []
-    for c in range(num_channels):
+    for c in range(len(launches)):
         l = np.asarray(launches[c])
         in_win = ((l >= lo) & (l < hi)).sum()
         gaps = np.diff(l)
@@ -480,13 +502,160 @@ def simulate_multichannel(
             desc_beats=int(desc_beats[c]),
             utilization=float(in_win * payload_beats_each / window),
             mean_launch_gap=float(gaps.mean()) if len(gaps) else 0.0,
+            shard=shard_of[c],
         ))
-    agg = float(sum(ch.utilization for ch in chans))
+    return chans, window
+
+
+def simulate_multichannel(
+    num_channels: int,
+    mem_latency: int,
+    transfer_bytes: int,
+    *,
+    num_transfers: int = 500,
+    weights: Optional[List[int]] = None,
+    arbitration: str = "weighted_rr",
+    shard_of: Optional[List[int]] = None,
+    cross_fraction: float = 0.0,
+    interconnect_latency: Optional[int] = None,
+    seed: int = 0,
+) -> MultiChannelResult:
+    """N serialized frontends (base config) interleaved on shared buses.
+
+    Each channel alone suffers the §II-A descriptor serialization (its next
+    fetch waits for the previous ``next`` field); the multi-channel runtime
+    hides that latency with *inter-channel* parallelism: while channel A
+    waits on its round trip, B..N own the bus. The arbiter is the smooth
+    weighted round-robin used by :class:`repro.runtime.WeightedArbiter`
+    (all-equal weights == fair RR, the paper's §III-A arbiter).
+
+    **Per-shard frontend grouping** (sharded serving, DESIGN.md §6): with
+    ``shard_of`` (one group id per channel), each shard's channels contend
+    on their *own* local bus, and a deterministic ``cross_fraction`` of
+    every shard's transfers are cross-shard migrations: after finishing on
+    the local bus they traverse one shared interconnect
+    (``interconnect_latency``, default ``4 * mem_latency`` — the slow
+    fabric between shards) carrying the payload plus one per-hop §II-D
+    writeback beat. ``shard_of=None`` is the original single-bus model,
+    bit-for-bit.
+    """
+    if transfer_bytes % BUS_BYTES:
+        raise ValueError("paper evaluates bus-aligned transfer sizes")
+    if num_channels < 1:
+        raise ValueError("need >= 1 channel")
+    weights = list(weights) if weights else [1] * num_channels
+    if len(weights) != num_channels:
+        raise ValueError("one weight per channel")
+    del arbitration  # single policy today; named for config clarity
+    payload_beats_each = max(1, transfer_bytes // BUS_BYTES)
     ideal = ideal_utilization(transfer_bytes)
+
+    if shard_of is None:
+        if cross_fraction:
+            raise ValueError("cross_fraction requires shard_of grouping")
+        bus = _Bus(mem_latency)
+        launches, _, desc_beats, payload_beats, last_end = \
+            _multichannel_pass(num_channels, bus, payload_beats_each,
+                               num_transfers, weights)
+        chans, _ = _channel_results(
+            launches, desc_beats, payload_beats, payload_beats_each,
+            num_transfers, weights, [0] * num_channels)
+        agg = float(sum(ch.utilization for ch in chans))
+        return MultiChannelResult(
+            mem_latency=mem_latency, transfer_bytes=transfer_bytes,
+            aggregate_utilization=min(agg, ideal), ideal=ideal,
+            cycles=int(last_end), channels=chans)
+
+    # -- sharded grouping ---------------------------------------------------
+    if len(shard_of) != num_channels:
+        raise ValueError("one shard id per channel")
+    if not 0.0 <= cross_fraction <= 1.0:
+        raise ValueError("cross_fraction must be in [0, 1]")
+    shards = sorted(set(shard_of))
+    if interconnect_latency is None:
+        interconnect_latency = 4 * mem_latency
+
+    launches = [None] * num_channels
+    ends = [None] * num_channels
+    desc_beats = np.zeros(num_channels, np.int64)
+    payload_beats = np.zeros(num_channels, np.int64)
+    last_end = 0.0
+    for s in shards:
+        members = [c for c in range(num_channels) if shard_of[c] == s]
+        bus = _Bus(mem_latency)
+        l, e, db, pb, le = _multichannel_pass(
+            len(members), bus, payload_beats_each, num_transfers,
+            [weights[c] for c in members])
+        for k, c in enumerate(members):
+            launches[c], ends[c] = l[k], e[k]
+            desc_beats[c], payload_beats[c] = db[k], pb[k]
+        last_end = max(last_end, le)
+
+    chans, window = _channel_results(
+        launches, desc_beats, payload_beats, payload_beats_each,
+        num_transfers, weights, list(shard_of))
+    per_shard = [
+        float(sum(ch.utilization for ch in chans if ch.shard == s))
+        for s in shards]
+
+    # Interconnect phase: a deterministic subset of each channel's
+    # transfers migrate to a remote shard. Hops are granted FCFS in
+    # local-completion order; each occupies the interconnect for the
+    # payload plus the per-hop completion writeback beat.
+    hop_times: List[float] = []
+    if len(shards) > 1 and cross_fraction > 0.0:
+        for c in range(num_channels):
+            rng = np.random.default_rng([seed, shard_of[c], c])
+            e = np.asarray(ends[c])
+            hop_times.extend(e[rng.random(len(e)) < cross_fraction].tolist())
+    hop_times.sort()
+    ibus = _Bus(interconnect_latency)
+    hop_beats = payload_beats_each + 1   # payload + §II-D writeback beat
+    added = []
+    for t in hop_times:
+        _, hop_end = ibus.fetch(t + 1, hop_beats)
+        added.append(hop_end - t)
+        last_end = max(last_end, hop_end)
+    sharded = ShardedBusResult(
+        num_shards=len(shards),
+        per_shard_utilization=per_shard,
+        mean_shard_utilization=float(np.mean(per_shard)),
+        cross_transfers=len(hop_times),
+        cross_fraction=cross_fraction,
+        interconnect_latency=interconnect_latency,
+        migration_cycles_mean=float(np.mean(added)) if added else 0.0,
+        interconnect_busy_beats=len(hop_times) * hop_beats,
+    )
+    agg = float(sum(per_shard))
     return MultiChannelResult(
         mem_latency=mem_latency, transfer_bytes=transfer_bytes,
-        aggregate_utilization=min(agg, ideal), ideal=ideal,
-        cycles=int(last_end), channels=chans)
+        # Shard-local buses scale the aggregate past one bus's Eq.-1
+        # ideal; cap at the mesh-wide ideal instead (S local buses).
+        aggregate_utilization=min(agg, ideal * len(shards)), ideal=ideal,
+        cycles=int(last_end), channels=chans, sharded=sharded)
+
+
+def simulate_sharded(
+    num_shards: int,
+    channels_per_shard: int,
+    mem_latency: int,
+    transfer_bytes: int,
+    *,
+    num_transfers: int = 500,
+    cross_fraction: float = 0.0,
+    interconnect_latency: Optional[int] = None,
+    seed: int = 0,
+) -> MultiChannelResult:
+    """S shard groups of N frontends each: the sharded runtime's bus model."""
+    if num_shards < 1:
+        raise ValueError("need >= 1 shard")
+    shard_of = [s for s in range(num_shards)
+                for _ in range(channels_per_shard)]
+    return simulate_multichannel(
+        num_shards * channels_per_shard, mem_latency, transfer_bytes,
+        num_transfers=num_transfers, shard_of=shard_of,
+        cross_fraction=cross_fraction if num_shards > 1 else 0.0,
+        interconnect_latency=interconnect_latency, seed=seed)
 
 
 def table_iv(mem_latencies=(1, 13, 100)) -> Dict[str, Dict]:

@@ -1,4 +1,5 @@
-"""Distribution substrate: logical-axis sharding, policies, fault tolerance."""
+"""Distribution substrate: logical-axis sharding, policies, fault tolerance,
+and the sharded DMA serving layer (DESIGN.md §6)."""
 from .shardlib import (  # noqa: F401
     axis_size,
     clear_mesh,
@@ -8,4 +9,13 @@ from .shardlib import (  # noqa: F401
     set_mesh,
     set_rules,
     shard,
+    use_mesh,
+)
+from .sharded_runtime import (  # noqa: F401
+    MigrationStats,
+    PageOwnerMap,
+    ShardedDMARuntime,
+    ShardedKVPool,
+    ShardedServeEngine,
+    resolve_num_shards,
 )

@@ -1,0 +1,646 @@
+"""Sharded DMA serving across a device mesh (DESIGN.md §6).
+
+The paper's win is decoupling transfer *launch* from the processing units;
+at production scale that decoupling must survive sharding. Following the
+multi-frontend direction of iDMA (arXiv 2305.05240) and XDMA's
+distributed layout-flexible data movement (arXiv 2508.08396), this module
+instantiates one full :class:`repro.runtime.DMARuntime` — submission
+rings, serial data channels, coalescer, completion queue, control channel
+— per mesh shard, and lowers every cross-shard page movement into §II-B
+descriptor chains:
+
+* **Page ownership** (:class:`PageOwnerMap`) — the global page space is
+  statically partitioned across shards; a page's owner never changes, the
+  page *contents* move.
+* **Migration planner** (:meth:`ShardedDMARuntime.migrate_rows`) — page
+  moves are split into shard-local chains (submitted straight to the
+  owner's serial channel, where the runtime coalescer merges contiguous
+  page runs) and cross-shard *hops*: an egress gather chain on the source
+  shard into a staging buffer, the fabric transfer (``jax.device_put``
+  when the shard has a real mesh device), and an ingress scatter chain on
+  the destination shard. Every hop carries a per-hop completion control
+  descriptor on the destination's control channel: the §II-D writeback is
+  the only signal the planner trusts that a hop's bytes landed.
+* **Sharded serve path** (:class:`ShardedServeEngine`) — requests are
+  admitted to the shard that owns (the majority of) their KV pages;
+  pages a request needs from other shards become migration chains into
+  the owning shard before admission ("remote reads become migrations").
+
+Shards are *logical*: with a `jax.sharding.Mesh` the per-shard pools are
+placed on the mesh's devices (1×N and N×1 meshes are equivalent — the
+shard count is the device count), and without one everything runs on the
+default device with identical semantics, so the perf sweep's gated
+numbers are placement-independent and regenerate bit-for-bit anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import from_segments
+from repro.core.prefetch import estimate_hit_rate
+from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
+
+from . import shardlib
+
+
+def resolve_num_shards(mesh=None) -> int:
+    """Shard count of a mesh: its total device count (shape-agnostic, so
+    1×N and N×1 meshes shard identically)."""
+    mesh = mesh if mesh is not None else shardlib.current_mesh()
+    if mesh is None:
+        return 1
+    return int(np.prod(list(mesh.shape.values()), dtype=np.int64))
+
+
+@dataclasses.dataclass(frozen=True)
+class PageOwnerMap:
+    """Static partition of a global page space across shards.
+
+    Shard ``s`` owns the contiguous block of global pages
+    ``[s * pages_per_shard, (s + 1) * pages_per_shard)``; a page's local
+    row on its owner is its offset inside that block.
+    """
+
+    num_pages: int
+    num_shards: int
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError("need >= 1 shard")
+        if self.num_pages % self.num_shards:
+            raise ValueError(
+                f"{self.num_pages} pages do not partition evenly over "
+                f"{self.num_shards} shards")
+
+    @property
+    def pages_per_shard(self) -> int:
+        return self.num_pages // self.num_shards
+
+    def owner(self, page: int) -> int:
+        if not 0 <= page < self.num_pages:
+            raise IndexError(f"page {page} outside [0, {self.num_pages})")
+        return page // self.pages_per_shard
+
+    def local_row(self, page: int) -> int:
+        return page % self.pages_per_shard
+
+    def shard_pages(self, shard: int) -> range:
+        lo = shard * self.pages_per_shard
+        return range(lo, lo + self.pages_per_shard)
+
+
+@dataclasses.dataclass
+class MigrationStats:
+    """What one ``migrate_rows`` plan did, summed over pools and hops."""
+
+    pages: int = 0              # page moves requested
+    local_pages: int = 0        # moves with src and dst on one shard
+    cross_pages: int = 0        # moves that crossed the fabric
+    hops: int = 0               # (src_shard, dst_shard) fabric transfers
+    chain_in: int = 0           # descriptors before the coalescer
+    chain_out: int = 0          # descriptors after merge (real submissions)
+    hop_completions: int = 0    # per-hop §II-D writebacks observed
+
+    @property
+    def merge_ratio(self) -> float:
+        """chain_in / chain_out — the §II-C payoff of run-preserving
+        migration plans (>1 means contiguous page runs were fused)."""
+        return self.chain_in / max(self.chain_out, 1)
+
+    def merge(self, other: "MigrationStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+class ShardedDMARuntime:
+    """One DMA runtime per mesh shard plus the cross-shard migration planner.
+
+    Each shard owns ``data_channels`` serial-tier channels (the §II-B
+    chain path, coalescer on) and one control-tier ``completion`` channel
+    (serve-request markers and per-hop migration writebacks). Pools are
+    registered *sharded*: a flat global row space split into per-shard
+    slices, placed on the shard's mesh device when a mesh is present.
+    """
+
+    STAGE_POOL = "migrate.stage"
+
+    def __init__(
+        self,
+        num_shards: Optional[int] = None,
+        mesh=None,
+        *,
+        data_channels: int = 2,
+        ring_capacity: int = 256,
+        max_len: int = 1024,
+        completion_ring: int = 256,
+        arbitration: str = "round_robin",
+        backpressure: str = "block",
+        speculation=None,
+    ):
+        explicit_mesh = mesh is not None
+        mesh = mesh if explicit_mesh else shardlib.current_mesh()
+        mesh_shards = resolve_num_shards(mesh)
+        if num_shards is None:
+            num_shards = mesh_shards
+        if mesh is not None and num_shards != mesh_shards:
+            if explicit_mesh:
+                raise ValueError(
+                    f"num_shards={num_shards} but the mesh has "
+                    f"{mesh_shards} devices; drop one or make them agree")
+            # An *ambient* mesh of the wrong size must not veto an
+            # explicit shard count (e.g. the mesh-1 perf cell running
+            # inside someone else's 8-device context): shards are
+            # logical, so just run unplaced — no metric depends on it.
+            mesh = None
+        if num_shards < 1:
+            raise ValueError("need >= 1 shard")
+        self.num_shards = num_shards
+        self.mesh = mesh
+        self._devices = (list(mesh.devices.flat)
+                         if mesh is not None else None)
+        self.data_channels = data_channels
+        self.shards: List[DMARuntime] = []
+        for _ in range(num_shards):
+            cfgs = [ChannelConfig(name=f"dma{i}", tier="serial",
+                                  ring_capacity=ring_capacity,
+                                  max_len=max_len)
+                    for i in range(data_channels)]
+            cfgs.append(ChannelConfig(name="completion", tier="control",
+                                      ring_capacity=completion_ring))
+            self.shards.append(DMARuntime(
+                cfgs, arbitration=arbitration, backpressure=backpressure,
+                speculation=speculation))
+        self.max_len = max_len
+        self._sharded_pools: Dict[str, PageOwnerMap] = {}
+        self._row_elems: Dict[str, int] = {}
+        self._pool_elems: Dict[str, int] = {}   # logical per-shard elements
+        self.migration = MigrationStats()
+
+    # -- instrumentation -----------------------------------------------------
+    def attach_probe(self, probe: Optional[PerfProbe]) -> None:
+        """One probe observes every shard (channel names collide by design:
+        the probe's per-channel counters aggregate the mesh)."""
+        for rt in self.shards:
+            rt.attach_probe(probe)
+
+    # -- pools ---------------------------------------------------------------
+    def _place(self, shard: int, array: jax.Array) -> jax.Array:
+        if self._devices is None:
+            return array
+        return jax.device_put(array, self._devices[shard])
+
+    def _pad(self, array: jax.Array) -> jax.Array:
+        """Append ``max_len`` of tail padding to a flat pool.
+
+        ``execute_serial`` copies through static ``max_len``-sized masked
+        windows whose start offsets XLA *clamps* into bounds — a window
+        starting within ``max_len`` of the pool end would silently land at
+        the clamped offset. Tail padding guarantees every in-bounds
+        descriptor's window fits, so no start is ever clamped.
+        """
+        return jnp.concatenate(
+            [array, jnp.zeros(self.max_len, array.dtype)])
+
+    def register_sharded_pool(self, name: str, array: jax.Array,
+                              owner: PageOwnerMap, row_elems: int) -> None:
+        """Split a flat global row pool into per-shard slices.
+
+        ``array`` has ``owner.num_pages * row_elems`` elements; shard ``s``
+        receives the slice covering its pages, device-placed when meshed.
+        """
+        if name == self.STAGE_POOL:
+            raise ValueError(
+                f"pool name {self.STAGE_POOL!r} is reserved for the "
+                "migration planner's staging buffer")
+        array = jnp.asarray(array)
+        if array.ndim != 1 or array.shape[0] != owner.num_pages * row_elems:
+            raise ValueError(
+                f"pool {name!r}: expected flat "
+                f"({owner.num_pages * row_elems},) array, "
+                f"got shape {array.shape}")
+        if owner.num_shards != self.num_shards:
+            raise ValueError("owner map shard count mismatch")
+        per = owner.pages_per_shard * row_elems
+        for s, rt in enumerate(self.shards):
+            rt.register_pool(name, self._place(
+                s, self._pad(array[s * per:(s + 1) * per])))
+        self._sharded_pools[name] = owner
+        self._row_elems[name] = row_elems
+        self._pool_elems[name] = per
+
+    def pool_shard(self, name: str, shard: int) -> jax.Array:
+        """A shard's logical pool slice (padding stripped)."""
+        return self.shards[shard].pool(name)[:self._pool_elems[name]]
+
+    def gather_pool(self, name: str) -> np.ndarray:
+        """The global flat pool, reassembled host-side in page order."""
+        return np.concatenate([np.asarray(self.pool_shard(name, s))
+                               for s in range(self.num_shards)])
+
+    # -- migration planner ---------------------------------------------------
+    def migrate_rows(
+        self,
+        pool_names: Sequence[str],
+        src_pages: Sequence[int],
+        dst_pages: Sequence[int],
+        *,
+        drain: bool = True,
+    ) -> MigrationStats:
+        """Lower page moves into descriptor chains across the mesh.
+
+        All named pools move in lockstep under one plan (the paged-KV K/V
+        pair). Local moves go straight onto the owner shard's serial
+        channels; cross-shard moves become per-(src, dst)-shard hops:
+        egress gather chain -> fabric -> ingress scatter chain, with the
+        hop's completion control descriptor written back (§II-D) on the
+        destination shard only after the ingress chain drained.
+        """
+        if len(src_pages) != len(dst_pages):
+            raise ValueError("src/dst page lists must pair up")
+        stats = MigrationStats()
+        if not src_pages:
+            return stats
+        if not pool_names:
+            raise ValueError("need at least one pool to migrate")
+        owner = self._sharded_pools[pool_names[0]]
+        for name in pool_names:
+            if self._sharded_pools.get(name) != owner:
+                raise ValueError(
+                    f"pool {name!r} is not sharded under the same owner map")
+
+        src = np.asarray(src_pages, np.int64)
+        dst = np.asarray(dst_pages, np.int64)
+        # Hops execute grouped by shard pair, not in plan order, and even
+        # one in-order chain clobbers serially — a destination that is
+        # also a source (or a doubly-written destination) is ambiguous.
+        # Every real caller (defrag, remote-read pull-in) moves onto free
+        # pages, so reject overlap loudly instead of corrupting quietly.
+        if len(set(dst.tolist())) != len(dst):
+            raise ValueError("duplicate destination pages in migration plan")
+        overlap = set(src.tolist()) & set(dst.tolist())
+        if overlap:
+            raise ValueError(
+                f"migration plan reads and writes pages {sorted(overlap)}; "
+                "stage through free pages instead")
+        stats.pages = len(src)
+        s_owner = src // owner.pages_per_shard
+        d_owner = dst // owner.pages_per_shard
+        src_local = src % owner.pages_per_shard
+        dst_local = dst % owner.pages_per_shard
+
+        # Group moves by (src_shard, dst_shard), preserving plan order so
+        # contiguous page runs survive into the chains the coalescer sees.
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for k in range(len(src)):
+            groups.setdefault((int(s_owner[k]), int(d_owner[k])),
+                              []).append(k)
+
+        for (ss, ds), idx in sorted(groups.items()):
+            rows_s = src_local[idx]
+            rows_d = dst_local[idx]
+            if ss == ds:
+                stats.local_pages += len(idx)
+                self._submit_local(pool_names, ss, rows_s, rows_d, stats)
+            else:
+                stats.cross_pages += len(idx)
+                stats.hops += 1
+                self._submit_hop(pool_names, ss, ds, rows_s, rows_d, stats)
+        if drain:
+            self.drain_until_idle()
+        self.migration.merge(stats)
+        return stats
+
+    def _chain(self, rows_s: np.ndarray, rows_d: np.ndarray,
+               row_elems: int):
+        return from_segments(rows_s * row_elems, rows_d * row_elems,
+                             np.full(len(rows_s), row_elems, np.int64))
+
+    def _submit_local(self, pool_names, shard, rows_s, rows_d, stats):
+        rt = self.shards[shard]
+        for name in pool_names:
+            d = self._chain(rows_s, rows_d, self._row_elems[name])
+            res = rt.submit(d, src_pool=name, dst_pool=name, tier="serial")
+            if res.coalesce is not None:
+                stats.chain_in += res.coalesce.n_in
+                stats.chain_out += res.coalesce.n_out
+        rt.drain_until_idle()
+
+    def _submit_hop(self, pool_names, src_shard, dst_shard,
+                    rows_s, rows_d, stats):
+        src_rt = self.shards[src_shard]
+        dst_rt = self.shards[dst_shard]
+        n = len(rows_s)
+        ctrl = dst_rt.submit_control(payload=src_shard,
+                                     channel="completion")
+        for name in pool_names:
+            row_elems = self._row_elems[name]
+            stage_rows = np.arange(n, dtype=np.int64)
+            # Egress: gather the moving pages into a dense staging buffer
+            # on the source shard (the fabric's send window).
+            src_rt.register_pool(
+                self.STAGE_POOL,
+                self._place(src_shard, self._pad(jnp.zeros(
+                    n * row_elems, src_rt.pool(name).dtype))))
+            d_out = self._chain(rows_s, stage_rows, row_elems)
+            res = src_rt.submit(d_out, src_pool=name,
+                                dst_pool=self.STAGE_POOL, tier="serial")
+            if res.coalesce is not None:
+                stats.chain_in += res.coalesce.n_in
+                stats.chain_out += res.coalesce.n_out
+            src_rt.drain_until_idle()
+            # Fabric transfer: the staging buffer crosses to the
+            # destination shard's device.
+            stage = self._place(dst_shard, src_rt.pool(self.STAGE_POOL))
+            dst_rt.register_pool(self.STAGE_POOL, stage)
+            # Ingress: scatter staging rows onto the destination pages.
+            d_in = self._chain(stage_rows, rows_d, row_elems)
+            res = dst_rt.submit(d_in, src_pool=self.STAGE_POOL,
+                                dst_pool=name, tier="serial")
+            if res.coalesce is not None:
+                stats.chain_in += res.coalesce.n_in
+                stats.chain_out += res.coalesce.n_out
+            dst_rt.drain_until_idle()
+        # Per-hop completion: only after every pool's ingress chain
+        # drained does the hop's control descriptor get its §II-D
+        # writeback. It is observed via the non-destructive ring table
+        # scan (the serve scheduler's poll): draining the shared
+        # completion queue here would steal other owners' events — a
+        # ServeEngine on this shard polls the same queue.
+        dst_rt.complete(ctrl.tickets[-1])
+        ring = dst_rt.channels["completion"].ring
+        stats.hop_completions += int(
+            ctrl.tickets[-1] in ring.live_done_tickets())
+        # The staging buffer is planner-internal scratch: drop it so pool
+        # enumerations (stats, gather, serialization) never see hop state.
+        src_rt.pools.pop(self.STAGE_POOL, None)
+        dst_rt.pools.pop(self.STAGE_POOL, None)
+
+    # -- drain / stats -------------------------------------------------------
+    def drain_all(self) -> int:
+        return sum(rt.drain_all() for rt in self.shards)
+
+    def drain_until_idle(self, max_rounds: int = 1024) -> None:
+        for rt in self.shards:
+            rt.drain_until_idle(max_rounds)
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "num_shards": self.num_shards,
+            "migration": dataclasses.asdict(self.migration),
+            "migration_chain_merge_ratio": self.migration.merge_ratio,
+            "shards": [rt.stats() for rt in self.shards],
+        }
+
+
+class ShardedKVPool:
+    """Paged K/V pool partitioned across a sharded runtime's shards.
+
+    Flat element-space pools (one K, one V) so migration chains run on the
+    serial tier and the runtime coalescer genuinely merges contiguous page
+    runs — the source of ``migration_chain_merge_ratio``. Page allocation
+    is shard-aware: :meth:`alloc_on` hands out pages *owned by* a given
+    shard, which is how the serve router keeps a request's pages local.
+    """
+
+    POOL_K = "kv.k"
+    POOL_V = "kv.v"
+
+    def __init__(self, runtime: ShardedDMARuntime, *, num_pages: int,
+                 page: int, kv_heads: int, head_dim: int,
+                 dtype=jnp.float32):
+        self.rt = runtime
+        self.page, self.kv_heads, self.head_dim = page, kv_heads, head_dim
+        self.row_elems = page * kv_heads * head_dim
+        self.owner = PageOwnerMap(num_pages, runtime.num_shards)
+        flat = jnp.zeros(num_pages * self.row_elems, dtype)
+        runtime.register_sharded_pool(self.POOL_K, flat, self.owner,
+                                      self.row_elems)
+        runtime.register_sharded_pool(self.POOL_V, flat, self.owner,
+                                      self.row_elems)
+        self._free: List[List[int]] = [
+            sorted(self.owner.shard_pages(s))
+            for s in range(runtime.num_shards)]
+
+    # -- allocation ----------------------------------------------------------
+    def free_pages_on(self, shard: int) -> int:
+        return len(self._free[shard])
+
+    def alloc_on(self, shard: int, n: int) -> List[int]:
+        """Lowest-id free pages owned by ``shard`` (sequential preference:
+        consecutive ids keep the §II-C speculator hitting)."""
+        free = self._free[shard]
+        if n > len(free):
+            raise RuntimeError(
+                f"shard {shard}: need {n} pages, have {len(free)}")
+        out, self._free[shard] = free[:n], free[n:]
+        return out
+
+    def release(self, pages: Sequence[int]) -> None:
+        touched = set()
+        for p in pages:
+            s = self.owner.owner(int(p))
+            self._free[s].append(int(p))
+            touched.add(s)
+        for s in touched:
+            self._free[s].sort()
+
+    # -- contents (host-side oracle / writers) -------------------------------
+    def write_page(self, page: int, k_row: np.ndarray,
+                   v_row: np.ndarray) -> None:
+        s = self.owner.owner(page)
+        lo = self.owner.local_row(page) * self.row_elems
+        rt = self.rt.shards[s]
+        for name, row in ((self.POOL_K, k_row), (self.POOL_V, v_row)):
+            arr = rt.pool(name)
+            rt.register_pool(name, arr.at[lo:lo + self.row_elems].set(
+                jnp.asarray(row, arr.dtype).reshape(-1)))
+
+    def page_rows(self, pages: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """(K, V) rows for ``pages``, gathered host-side (test oracle)."""
+        ks, vs = [], []
+        for p in pages:
+            s = self.owner.owner(int(p))
+            lo = self.owner.local_row(int(p)) * self.row_elems
+            ks.append(np.asarray(
+                self.rt.pool_shard(self.POOL_K, s)[lo:lo + self.row_elems]))
+            vs.append(np.asarray(
+                self.rt.pool_shard(self.POOL_V, s)[lo:lo + self.row_elems]))
+        return (np.stack(ks) if ks else np.zeros((0, self.row_elems)),
+                np.stack(vs) if vs else np.zeros((0, self.row_elems)))
+
+    # -- runtime-mediated movement (DESIGN.md §6) ----------------------------
+    def move_pages(self, src_pages: Sequence[int],
+                   dst_pages: Sequence[int]) -> MigrationStats:
+        """Relocate page contents through the sharded runtime: local moves
+        stay on the owner's channels, cross-owner moves become hops."""
+        return self.rt.migrate_rows(
+            (self.POOL_K, self.POOL_V), src_pages, dst_pages)
+
+    def defragment(self, pages: Sequence[int]) -> Tuple[List[int],
+                                                        MigrationStats,
+                                                        float]:
+        """Compact a page list onto the lowest free ids (possibly on other
+        shards) and return ``(new_pages, stats, new_hit_rate)``.
+
+        The physical copy is descriptor work through the runtime; the
+        freed source pages return to their owners' free lists afterwards.
+        """
+        pages = [int(p) for p in pages]
+        n = len(pages)
+        if n == 0:
+            return [], MigrationStats(), 1.0
+        free_all = sorted(p for free in self._free for p in free)
+        if len(free_all) < n:
+            raise RuntimeError(f"defragment: need {n} free pages, "
+                               f"have {len(free_all)}")
+        new = free_all[:n]
+        for p in new:
+            self._free[self.owner.owner(p)].remove(p)
+        stats = self.move_pages(pages, new)
+        self.release(pages)
+        rate = estimate_hit_rate(np.asarray(new, np.int64) * 32)
+        return new, stats, rate
+
+
+class ShardedServeEngine:
+    """Continuous-batching serving over a sharded runtime.
+
+    One :class:`repro.serve.ServeEngine` per shard, each riding its
+    shard's control channel for §II-D request completions. Admission is
+    *ownership routing*: a request goes to the shard owning the majority
+    of its KV pages (ties to the lowest shard; page-less requests
+    round-robin by uid). Pages the winning shard does not own are
+    migrated in first — the remote read becomes a migration chain — so by
+    the time the request decodes, all of its pages are shard-local.
+    """
+
+    def __init__(self, params, cfg, *, runtime: ShardedDMARuntime,
+                 kv_pool: Optional[ShardedKVPool] = None,
+                 capacity: int = 2, max_len: int = 64, greedy: bool = True):
+        from repro.serve import ServeEngine
+        if kv_pool is not None and kv_pool.rt is not runtime:
+            raise ValueError("kv_pool must live on the same sharded runtime")
+        self.rt = runtime
+        self.kv = kv_pool
+        self.engines = [
+            ServeEngine(params, cfg, capacity=capacity, max_len=max_len,
+                        greedy=greedy, runtime=rt)
+            for rt in runtime.shards]
+        self.shard_of: Dict[int, int] = {}       # uid -> shard
+        self.request_pages: Dict[int, List[int]] = {}
+        self.requests_per_shard = [0] * runtime.num_shards
+        self.remote_page_reads = 0
+        self.migration = MigrationStats()
+        # Pages may be shared across requests; a migrated-away source is
+        # only freed once no admitted-but-undelivered request still reads
+        # it (the migration copies contents, so earlier readers keep
+        # valid data on the original page).
+        self._page_refs: Dict[int, int] = {}
+        self._deferred_free: set = set()
+        self._unreffed: set = set()              # uids already decreffed
+
+    # -- routing -------------------------------------------------------------
+    def _route(self, uid: int, kv_pages: Optional[Sequence[int]]) -> int:
+        if not kv_pages or self.kv is None:
+            # No pages (or no pool to own them): deterministic round-robin.
+            return uid % self.rt.num_shards
+        counts = np.zeros(self.rt.num_shards, np.int64)
+        for p in kv_pages:
+            counts[self.kv.owner.owner(int(p))] += 1
+        return int(np.argmax(counts))   # argmax ties -> lowest shard
+
+    def submit(self, req) -> int:
+        """Admit ``req`` to the shard owning its KV pages; returns the
+        shard. Remote pages are migrated into the owner first."""
+        kv_pages = list(getattr(req, "kv_pages", None) or [])
+        shard = self._route(req.uid, kv_pages)
+        if kv_pages and self.kv is not None:
+            # Dedupe: a page listed twice still migrates (and frees) once.
+            remote = list(dict.fromkeys(
+                p for p in kv_pages
+                if self.kv.owner.owner(int(p)) != shard))
+            if remote:
+                new_local = self.kv.alloc_on(shard, len(remote))
+                stats = self.kv.move_pages(remote, new_local)
+                # Counted only once the pull-in actually happened, so the
+                # counter always matches the merged migration stats.
+                self.remote_page_reads += len(remote)
+                self.migration.merge(stats)
+                # Free a migrated source only when no earlier live
+                # request still references it; shared pages wait on the
+                # deferred list until their last reader is delivered.
+                shared = {p for p in remote
+                          if self._page_refs.get(p, 0) > 0}
+                self.kv.release([p for p in remote if p not in shared])
+                self._deferred_free.update(shared)
+                remap = dict(zip(remote, new_local))
+                kv_pages = [remap.get(p, p) for p in kv_pages]
+                if hasattr(req, "kv_pages"):
+                    req.kv_pages = list(kv_pages)
+        for p in set(kv_pages):
+            self._page_refs[p] = self._page_refs.get(p, 0) + 1
+        self.request_pages[req.uid] = kv_pages
+        self.shard_of[req.uid] = shard
+        self.requests_per_shard[shard] += 1
+        self.engines[shard].submit(req)
+        return shard
+
+    # -- stepping ------------------------------------------------------------
+    def step(self) -> None:
+        for eng in self.engines:
+            eng.step()
+
+    def run(self, max_steps: int = 1000) -> Dict[int, object]:
+        for _ in range(max_steps):
+            if not any(eng.queue or any(s.busy for s in eng.slots)
+                       for eng in self.engines):
+                break
+            self.step()
+        # Deliver through the poll path so page refcounts (and deferred
+        # frees of migrated-away shared pages) always settle, whichever
+        # API the caller drives.
+        self.poll_completed()
+        out: Dict[int, object] = {}
+        for eng in self.engines:
+            out.update(eng.completed)
+        return out
+
+    def poll_completed(self) -> List[object]:
+        done: List[object] = []
+        for eng in self.engines:
+            done.extend(eng.poll_completed())
+        for req in done:
+            uid = req.uid
+            if uid in self._unreffed:
+                continue
+            self._unreffed.add(uid)
+            for p in set(self.request_pages.get(uid, [])):
+                self._page_refs[p] = self._page_refs.get(p, 1) - 1
+                if self._page_refs[p] <= 0 and p in self._deferred_free:
+                    self._deferred_free.discard(p)
+                    self.kv.release([p])
+        return done
+
+    # -- counters ------------------------------------------------------------
+    def attach_probe(self, probe: Optional[PerfProbe]) -> None:
+        for eng in self.engines:
+            eng.attach_probe(probe)
+
+    def perf_counters(self) -> Dict[str, object]:
+        per = [eng.perf_counters() for eng in self.engines]
+        return {
+            "num_shards": self.rt.num_shards,
+            "requests_per_shard": list(self.requests_per_shard),
+            "remote_page_reads": self.remote_page_reads,
+            "migration": dataclasses.asdict(self.migration),
+            "steps": max(p["steps"] for p in per),
+            "completed": sum(p["completed"] for p in per),
+            "admission_stalls": sum(p["admission_stalls"] for p in per),
+            "per_shard": per,
+        }

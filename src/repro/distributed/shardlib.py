@@ -4,11 +4,19 @@ a per-launch rule table maps them to mesh axes (MaxText-style).
 Models call ``shard(x, "batch", "seq", "heads", None)``; outside a mesh
 context this is the identity, so smoke tests and CPU examples never touch
 device state.
+
+Lifecycle contract: the mesh and the rule table live and die together.
+``set_mesh(None)`` (== ``clear_mesh()``) drops the rules too — rules are
+*interpretations of a mesh*, and letting them outlive it silently
+re-applies a stale mapping to the next mesh. State is thread-local, so
+concurrent launchers (e.g. a serving thread next to a background defrag
+thread) never observe each other's mesh; ``use_mesh`` is the scoped form.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, Iterator, Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -19,12 +27,19 @@ _state = threading.local()
 
 
 def set_mesh(mesh: Optional[Mesh]) -> None:
+    """Install (or with None, tear down) the thread's mesh.
+
+    Tearing down the mesh also clears the rules: the mesh/rules lifecycle
+    is symmetric, so ``set_mesh(None)`` and ``clear_mesh()`` leave the
+    thread in the identical pristine state.
+    """
     _state.mesh = mesh
+    if mesh is None:
+        _state.rules = {}
 
 
 def clear_mesh() -> None:
-    _state.mesh = None
-    _state.rules = {}
+    set_mesh(None)
 
 
 def current_mesh() -> Optional[Mesh]:
@@ -37,6 +52,26 @@ def set_rules(rules: Rules) -> None:
 
 def current_rules() -> Rules:
     return getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh],
+             rules: Optional[Rules] = None) -> Iterator[Optional[Mesh]]:
+    """Scoped mesh+rules install; restores the previous pair on exit.
+
+    The exception-safe form of the set/clear pair: state never leaks out
+    of the ``with`` block, even when the body throws mid-launch.
+    """
+    prev_mesh = current_mesh()
+    prev_rules = dict(current_rules())
+    set_mesh(mesh)
+    if rules is not None:
+        set_rules(rules)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev_mesh)
+        set_rules(prev_rules)
 
 
 def axis_size(mesh_axis: str) -> int:

@@ -31,6 +31,7 @@ import sys
 from typing import Dict, List, Optional, Sequence
 
 from .serve_cell import SERVE_GATED_METRICS
+from .sharded_cell import SHARDED_GATED_METRICS
 from .sweep import (
     GATED_METRICS,
     SCHEMA_VERSION,
@@ -57,6 +58,13 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
     "admission_stall_rate": 0.10,
     "completion_poll_latency_steps": 0.10,
     "serve_steps_per_request": 0.05,
+    # Sharded mesh cells (DESIGN.md §6). Migration cycles sit on a
+    # saturating interconnect, so queueing amplifies small plan changes —
+    # the wider band absorbs that without letting real fabric regressions
+    # (an extra hop per plan, a lost merge) through.
+    "cross_shard_migration_cycles": 0.05,
+    "per_shard_bus_utilization": 0.03,
+    "migration_chain_merge_ratio": 0.03,
 }
 
 #: +1 -> higher is better (regression = drop); -1 -> lower is better.
@@ -70,15 +78,23 @@ METRIC_POLARITY: Dict[str, int] = {
     "admission_stall_rate": -1,
     "completion_poll_latency_steps": -1,
     "serve_steps_per_request": -1,
+    "cross_shard_migration_cycles": -1,
+    "per_shard_bus_utilization": +1,
+    "migration_chain_merge_ratio": +1,
 }
 
-ALL_GATED_METRICS = tuple(GATED_METRICS) + tuple(SERVE_GATED_METRICS)
+ALL_GATED_METRICS = (tuple(GATED_METRICS) + tuple(SERVE_GATED_METRICS)
+                     + tuple(SHARDED_GATED_METRICS))
+
+_KIND_METRICS = {
+    "serve": SERVE_GATED_METRICS,
+    "sharded": SHARDED_GATED_METRICS,
+}
 
 
 def metrics_for_cell(cell: Dict[str, object]) -> Sequence[str]:
     """The gated metric set a cell must carry, by cell kind."""
-    return (SERVE_GATED_METRICS if cell.get("kind") == "serve"
-            else GATED_METRICS)
+    return _KIND_METRICS.get(cell.get("kind"), GATED_METRICS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,10 +223,10 @@ def quick_subset(doc: Dict[str, object]):
     dims = doc["dimensions"]
     ch = [c for c in dims["channel_counts"] if c in _QUICK_CHANNELS]
     lat = [m for m in dims["mem_latencies"] if m in _QUICK_LATENCIES]
-    # Serve cells are already reduced-config; the quick sweep always runs
-    # them, so they always stay gated.
+    # Serve and sharded cells are already reduced-config; the quick sweep
+    # always runs them, so they always stay gated.
     cells = {k: c for k, c in doc["cells"].items()
-             if c.get("kind") == "serve"
+             if c.get("kind") in ("serve", "sharded")
              or (c.get("channels") in ch and c.get("mem_latency") in lat)}
     if not cells:
         raise GateError(
@@ -254,14 +270,39 @@ def speculation_summary(doc: Dict[str, object]) -> str:
     return "\n".join(lines)
 
 
+def sharded_summary(doc: Dict[str, object]) -> str:
+    """Per-mesh-size migration table (printed with every gate verdict and
+    into the CI job summary, next to the adaptive-vs-fixed delta)."""
+    rows = sorted(
+        ((int(c.get("mesh", 0)), c.get("metrics", {}))
+         for c in doc["cells"].values() if c.get("kind") == "sharded"),
+        key=lambda r: r[0])
+    if not rows:
+        return "sharded: no mesh cells in this document"
+    lines = ["sharded: cross-shard migration by mesh size",
+             f"  {'mesh':>4}  {'migration_cycles':>16}  "
+             f"{'per_shard_util':>14}  {'merge_ratio':>11}"]
+    for mesh, m in rows:
+        lines.append(
+            f"  {mesh:>4}  "
+            f"{m.get('cross_shard_migration_cycles', float('nan')):>16.1f}  "
+            f"{m.get('per_shard_bus_utilization', float('nan')):>14.3f}  "
+            f"{m.get('migration_chain_merge_ratio', float('nan')):>11.2f}")
+    return "\n".join(lines)
+
+
 def _emit_summary(doc: Dict[str, object]) -> None:
-    text = speculation_summary(doc)
-    print(text)
+    spec_text = speculation_summary(doc)
+    sharded_text = sharded_summary(doc)
+    print(spec_text)
+    print(sharded_text)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if step_summary:
         with open(step_summary, "a") as f:
             f.write("### Perf gate — adaptive vs fixed speculation\n\n"
-                    "```\n" + text + "\n```\n")
+                    "```\n" + spec_text + "\n```\n")
+            f.write("### Perf gate — sharded mesh cells\n\n"
+                    "```\n" + sharded_text + "\n```\n")
 
 
 def _parse_tolerances(pairs: Sequence[str]) -> Dict[str, float]:

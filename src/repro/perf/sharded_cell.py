@@ -1,0 +1,195 @@
+"""Sharded mesh cells of the perf sweep (DESIGN.md §6, ROADMAP item).
+
+One cell per mesh size in {1, 2, 4, 8}: a seeded defrag-churn compaction
+over a page space partitioned across that many shards, lowered through the
+real :class:`repro.distributed.ShardedKVPool` /
+:class:`repro.distributed.ShardedDMARuntime` migration planner (local
+chains + cross-shard hops with per-hop §II-D writebacks), plus the
+sharded cycle model (:func:`repro.core.simulator.simulate_sharded`:
+per-shard local buses, one shared interconnect for migration hops).
+
+Gated metrics:
+
+* ``migration_chain_merge_ratio`` — descriptors in / descriptors out of
+  the migration plan's chains (the runtime coalescer fusing contiguous
+  page runs); measured on the real runtime, median over repeats.
+* ``per_shard_bus_utilization`` — mean shard-local steady-state bus
+  utilization from the sharded cycle model.
+* ``cross_shard_migration_cycles`` — mean added cycles a migrated
+  transfer spends on the interconnect (payload + writeback beat) after
+  finishing locally; exactly 0.0 on the mesh-1 cell by construction.
+
+Determinism contract: identical to the DMA cells — the workload is a pure
+function of ``(seed, cell_key)``, the cycle model is seeded from the cell
+key, device *placement* never enters any metric (the sharded runtime runs
+identically with or without a real `jax.sharding.Mesh`), and no
+wall-clock value is stored. When enough host devices exist (the CI lane's
+``--xla_force_host_platform_device_count=8``) the cell places its shards
+on a real CPU-device mesh; the document is bit-for-bit the same either
+way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.simulator import simulate_sharded
+from repro.perf.workloads import arch_params
+
+#: Gated sharded-cell metrics (gate.py carries polarity + bands).
+SHARDED_GATED_METRICS = (
+    "cross_shard_migration_cycles",
+    "per_shard_bus_utilization",
+    "migration_chain_merge_ratio",
+)
+
+#: The mesh axis of the sweep — matches the CI lane's 8 emulated devices.
+MESH_SIZES = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCellSpec:
+    """Fully determines one mesh cell (and hence its baseline entry)."""
+
+    arch: str = "qwen2.5-3b"
+    pages_per_shard: int = 64
+    n_moves: int = 96            # page moves per compaction pass
+    churn: float = 0.35          # fraction of pages freed before compaction
+    channels_per_shard: int = 2
+    mem_latency: int = 13
+    sim_transfers: int = 200
+    max_len: int = 512           # serial-channel burst window (elements)
+
+    def cell_key(self, mesh: int) -> str:
+        return f"sharded/{self.arch}/mesh{mesh}"
+
+
+DEFAULT_SHARDED_SPEC = ShardedCellSpec()
+
+
+def _mesh_for(num_shards: int):
+    """A real 1-D device mesh when the host has enough devices, else None
+    (logical shards — metrics are placement-independent either way)."""
+    import jax
+    devices = jax.devices()
+    if num_shards > 1 and len(devices) >= num_shards:
+        return jax.sharding.Mesh(
+            np.asarray(devices[:num_shards]), ("dma",))
+    return None
+
+
+def _churn_moves(rng: np.random.Generator, num_pages: int, n_moves: int,
+                 churn: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Defrag-churn compaction: surviving pages (scattered by churn) move
+    onto the freed low-id run — naturally cross-shard once the mesh >1."""
+    freed = rng.random(num_pages) < churn
+    live = np.flatnonzero(~freed)
+    free = np.flatnonzero(freed)
+    n = min(n_moves, len(live), len(free))
+    # The highest-id survivors compact onto the lowest-id free pages —
+    # mostly shard 0's, so a multi-shard mesh must hop the fabric.
+    src = live[-n:]
+    dst = free[:n]
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def _migration_pass(seed: int, mesh: int,
+                    spec: ShardedCellSpec) -> Dict[str, float]:
+    """One seeded compaction through the real sharded runtime."""
+    from repro.distributed.sharded_runtime import (
+        ShardedDMARuntime, ShardedKVPool)
+
+    cfg = get_config(spec.arch)
+    p = arch_params(cfg)
+    rng = np.random.default_rng(
+        [seed, mesh, zlib.crc32(spec.cell_key(mesh).encode())])
+    num_pages = spec.pages_per_shard * mesh
+    rt = ShardedDMARuntime(num_shards=mesh, mesh=_mesh_for(mesh),
+                           data_channels=spec.channels_per_shard,
+                           max_len=spec.max_len)
+    kv = ShardedKVPool(rt, num_pages=num_pages, page=p.page_elems,
+                       kv_heads=1, head_dim=1)
+    src, dst = _churn_moves(rng, num_pages, spec.n_moves, spec.churn)
+    stats = kv.move_pages(src.tolist(), dst.tolist())
+    if stats.hop_completions != stats.hops:
+        # Not an assert: the gate must catch this even under python -O.
+        raise RuntimeError(
+            "a cross-shard hop finished without its §II-D writeback "
+            f"({stats.hop_completions}/{stats.hops}) — the cell would "
+            "gate garbage")
+    return {
+        "merge_ratio": stats.merge_ratio,
+        "cross_fraction": stats.cross_pages / max(stats.pages, 1),
+        "pages": stats.pages,
+        "cross_pages": stats.cross_pages,
+        "hops": stats.hops,
+        "chain_in": stats.chain_in,
+        "chain_out": stats.chain_out,
+        "transfer_bytes": p.page_elems * 4,   # float32 page rows
+    }
+
+
+def run_sharded_cell(
+    seed: int,
+    mesh: int,
+    spec: ShardedCellSpec = DEFAULT_SHARDED_SPEC,
+    *,
+    repeats: int = 3,
+) -> Tuple[Dict[str, float], Dict[str, object]]:
+    """Run one mesh cell; returns ``(gated_metrics, stored_counters)``.
+
+    Runtime-side numbers are medians over ``repeats`` seeded compaction
+    passes (the same convention as the DMA cells); the cycle model runs
+    once at the median cross fraction.
+    """
+    passes = [_migration_pass(seed + r, mesh, spec) for r in range(repeats)]
+    merge = float(np.median([p["merge_ratio"] for p in passes]))
+    cross = float(np.median([p["cross_fraction"] for p in passes]))
+    transfer_bytes = int(passes[0]["transfer_bytes"])
+
+    sim = simulate_sharded(
+        mesh, spec.channels_per_shard, spec.mem_latency, transfer_bytes,
+        num_transfers=spec.sim_transfers, cross_fraction=cross,
+        seed=zlib.crc32(spec.cell_key(mesh).encode()) & 0x7FFFFFFF)
+    sh = sim.sharded
+    metrics = {
+        "cross_shard_migration_cycles": float(sh.migration_cycles_mean),
+        "per_shard_bus_utilization": float(sh.mean_shard_utilization),
+        "migration_chain_merge_ratio": merge,
+    }
+    counters = {
+        "mesh": mesh,
+        "cross_fraction": cross,
+        "migration": {k: int(passes[0][k]) for k in
+                      ("pages", "cross_pages", "hops",
+                       "chain_in", "chain_out")},
+        "sim": {
+            "per_shard_utilization": [float(u)
+                                      for u in sh.per_shard_utilization],
+            "cross_transfers": int(sh.cross_transfers),
+            "interconnect_latency": int(sh.interconnect_latency),
+            "interconnect_busy_beats": int(sh.interconnect_busy_beats),
+            "aggregate_utilization": float(sim.aggregate_utilization),
+        },
+    }
+    return metrics, counters
+
+
+def cell_entry(seed: int, mesh: int,
+               spec: Optional[ShardedCellSpec] = None,
+               repeats: int = 3) -> Tuple[str, Dict[str, object]]:
+    """(key, cell dict) for the sweep document."""
+    spec = spec or DEFAULT_SHARDED_SPEC
+    metrics, counters = run_sharded_cell(seed, mesh, spec, repeats=repeats)
+    return spec.cell_key(mesh), {
+        "kind": "sharded",
+        "arch": spec.arch,
+        "workload": "kv_migration",
+        "mesh": mesh,
+        "metrics": metrics,
+        "counters": counters,
+    }

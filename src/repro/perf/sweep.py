@@ -56,12 +56,19 @@ from .serve_cell import (
     SERVE_GATED_METRICS,
     run_serve_cell,
 )
+from .sharded_cell import (
+    DEFAULT_SHARDED_SPEC,
+    MESH_SIZES,
+    SHARDED_GATED_METRICS,
+    cell_entry as sharded_cell_entry,
+)
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
-#: v2: speculation-policy metrics (spec_bus_utilization_*) on every DMA
-#: cell, plus the end-to-end serve cell (kind: "serve"). Older baselines
-#: must be regenerated (DESIGN.md §4/§5).
-SCHEMA_VERSION = 2
+#: v3: sharded mesh cells (kind: "sharded", mesh in {1,2,4,8}) gating the
+#: cross-shard migration surface (DESIGN.md §6). v2 added the
+#: speculation-policy metrics (spec_bus_utilization_*) on every DMA cell
+#: plus the end-to-end serve cell. Older baselines must be regenerated.
+SCHEMA_VERSION = 3
 
 #: The gated perf surface of DMA cells. gate.py refuses documents missing
 #: any of these (serve cells gate SERVE_GATED_METRICS instead).
@@ -97,6 +104,8 @@ class SweepSpec:
     channel_counts: Sequence[int]
     mem_latencies: Sequence[int]
     include_serve: bool = True
+    mesh_sizes: Sequence[int] = MESH_SIZES
+    include_sharded: bool = True
 
     @property
     def scale(self) -> Scale:
@@ -113,6 +122,8 @@ def default_spec(
     mem_latencies: Optional[Sequence[int]] = None,
     repeats: Optional[int] = None,
     include_serve: bool = True,
+    mesh_sizes: Optional[Sequence[int]] = None,
+    include_sharded: bool = True,
 ) -> SweepSpec:
     if mode not in SCALES:
         raise ValueError(f"unknown mode {mode!r}; have {sorted(SCALES)}")
@@ -128,6 +139,9 @@ def default_spec(
         mem_latencies=tuple(mem_latencies if mem_latencies is not None
                             else ((13, 100) if quick else (1, 13, 100))),
         include_serve=include_serve,
+        mesh_sizes=tuple(mesh_sizes if mesh_sizes is not None
+                         else MESH_SIZES),
+        include_sharded=include_sharded,
     )
 
 
@@ -299,6 +313,19 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                 f"{k}={v:.3f}" for k, v in serve_metrics.items()),
                 file=sys.stderr)
 
+    sharded_cells = []
+    if spec.include_sharded:
+        for mesh in spec.mesh_sizes:
+            key, cell = sharded_cell_entry(
+                spec.seed, mesh, DEFAULT_SHARDED_SPEC,
+                repeats=spec.repeats)
+            cells[key] = cell
+            sharded_cells.append(key)
+            if progress:
+                print(f"  {key}: " + " ".join(
+                    f"{k}={v:.3f}" for k, v in cell["metrics"].items()),
+                    file=sys.stderr)
+
     return {
         "schema_version": SCHEMA_VERSION,
         "mode": spec.mode,
@@ -310,9 +337,12 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
             "channel_counts": list(spec.channel_counts),
             "mem_latencies": list(spec.mem_latencies),
             "serve_cells": serve_cells,
+            "mesh_sizes": list(spec.mesh_sizes),
+            "sharded_cells": sharded_cells,
         },
         "gated_metrics": list(GATED_METRICS),
         "serve_gated_metrics": list(SERVE_GATED_METRICS),
+        "sharded_gated_metrics": list(SHARDED_GATED_METRICS),
         "cells": cells,
     }
 
@@ -327,6 +357,8 @@ def spec_from_doc(doc: Dict[str, object]) -> SweepSpec:
         mem_latencies=dims["mem_latencies"],
         repeats=int(doc["repeats"]),
         include_serve=bool(dims.get("serve_cells")),
+        mesh_sizes=dims.get("mesh_sizes", MESH_SIZES),
+        include_sharded=bool(dims.get("sharded_cells")),
     )
 
 

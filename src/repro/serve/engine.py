@@ -34,6 +34,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # Global KV page ids the request reads (sharded serving: the router
+    # admits the request to the shard owning them — DESIGN.md §6). The
+    # sharded migration path may rewrite these to the post-migration ids.
+    kv_pages: Optional[List[int]] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
 

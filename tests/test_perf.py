@@ -88,7 +88,7 @@ def _mini_spec(seed=0):
         "quick", seed, archs=[list_archs()[0]],
         workloads=["paged_kv", "moe_dispatch"],
         channel_counts=[2], mem_latencies=[13], repeats=2,
-        include_serve=False)
+        include_serve=False, include_sharded=False)
 
 
 def test_sweep_document_is_bit_for_bit_deterministic():
@@ -99,7 +99,7 @@ def test_sweep_document_is_bit_for_bit_deterministic():
 
 def test_sweep_document_schema_and_counters():
     doc = run_sweep(_mini_spec())
-    assert doc["schema_version"] == 2
+    assert doc["schema_version"] == 3
     assert doc["cells"]
     for key, cell in doc["cells"].items():
         assert cell["kind"] == "dma"
@@ -141,7 +141,7 @@ def test_adaptive_matches_fixed_on_sequential_beats_it_on_storms():
         "quick", 0, archs=[list_archs()[0]],
         workloads=["paged_kv", "moe_dispatch", "defrag_churn"],
         channel_counts=[4], mem_latencies=[13, 100], repeats=1,
-        include_serve=False)
+        include_serve=False, include_sharded=False)
     doc = run_sweep(spec)
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -162,7 +162,7 @@ def test_committed_baseline_upholds_adaptive_claim():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_perf.json"
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == 2
+    assert doc["schema_version"] == 3
     checked = 0
     for key, cell in doc["cells"].items():
         if cell.get("kind") != "dma":

@@ -167,6 +167,75 @@ def test_quick_subset_always_keeps_serve_cells():
     assert dropped == 3
 
 
+# ---------------------------------------------------------------------------
+# Sharded mesh cells gate their own metric set
+# ---------------------------------------------------------------------------
+
+SHARDED_CELL = "sharded/archA/mesh4"
+
+
+def _sharded_cell(cycles=120.0, util=0.88, merge=1.8, mesh=4):
+    return {
+        "kind": "sharded",
+        "arch": "archA", "workload": "kv_migration", "mesh": mesh,
+        "metrics": {
+            "cross_shard_migration_cycles": cycles,
+            "per_shard_bus_utilization": util,
+            "migration_chain_merge_ratio": merge,
+        },
+        "counters": {},
+    }
+
+
+def test_sharded_cell_gates_its_metrics_with_polarity():
+    base = _doc(cells={CELL: _cell(), SHARDED_CELL: _sharded_cell()})
+    worse = _doc(cells={CELL: _cell(),
+                        SHARDED_CELL: _sharded_cell(cycles=150.0,
+                                                    merge=1.5)})
+    regs = gate.compare(base, worse)
+    assert sorted(r.metric for r in regs) == [
+        "cross_shard_migration_cycles", "migration_chain_merge_ratio"]
+    better = _doc(cells={CELL: _cell(),
+                         SHARDED_CELL: _sharded_cell(cycles=50.0,
+                                                     util=0.95)})
+    assert gate.compare(base, better) == []
+
+
+def test_sharded_cell_does_not_require_dma_metrics():
+    base = _doc(cells={SHARDED_CELL: _sharded_cell()})
+    assert gate.compare(base, copy.deepcopy(base)) == []
+
+
+def test_sharded_cell_missing_metric_errors():
+    base = _doc(cells={SHARDED_CELL: _sharded_cell()})
+    cur = _doc(cells={SHARDED_CELL: _sharded_cell()})
+    del cur["cells"][SHARDED_CELL]["metrics"]["per_shard_bus_utilization"]
+    with pytest.raises(gate.GateError,
+                       match="per_shard_bus_utilization.*missing from current"):
+        gate.compare(base, cur)
+
+
+def test_quick_subset_always_keeps_sharded_cells():
+    doc = _full_doc()
+    doc["cells"][SHARDED_CELL] = _sharded_cell()
+    sub, dropped = gate.quick_subset(doc)
+    assert SHARDED_CELL in sub["cells"]
+    assert dropped == 3
+
+
+def test_sharded_summary_prints_per_mesh_table():
+    doc = _doc(cells={
+        "sharded/archA/mesh1": _sharded_cell(cycles=0.0, mesh=1),
+        SHARDED_CELL: _sharded_cell(),
+    })
+    text = gate.sharded_summary(doc)
+    lines = text.splitlines()
+    assert "mesh" in lines[1]
+    # rows sorted by mesh size, cycles column populated
+    assert lines[2].split()[0] == "1" and lines[3].split()[0] == "4"
+    assert "120.0" in lines[3]
+
+
 def test_speculation_summary_names_workload_deltas():
     doc = _doc(cells={
         CELL: _cell(spec_fixed=0.5, spec_adaptive=0.6),
@@ -360,7 +429,8 @@ def _mini_spec(include_serve=False):
     return default_spec("quick", 0, archs=[list_archs()[0]],
                         workloads=["paged_kv"], channel_counts=[2],
                         mem_latencies=[100], repeats=2,
-                        include_serve=include_serve)
+                        include_serve=include_serve,
+                        include_sharded=False)
 
 
 def test_end_to_end_unchanged_tree_passes(tmp_path):
