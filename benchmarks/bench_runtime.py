@@ -56,6 +56,49 @@ def _bench_launch(n_desc: int = 256, repeats: int = 5, seed: int = 0) -> dict:
     }
 
 
+def _bench_translation(n_desc: int = 256, warm_rounds: int = 5,
+                       seed: int = 0, translation: bool = True) -> dict:
+    """Cold-vs-warm dispatch through the chain-lowering JIT (DESIGN.md §7).
+
+    One chain is dispatched cold (canonicalize + plan + lower + XLA
+    compile all on the path) and then replayed ``warm_rounds`` times, the
+    serve-shaped pattern the translation cache exists for. Timings are
+    wall-clock and live under ``wall_clock``; the cache counters are
+    deterministic event counts and stored alongside.
+    """
+    rt = default_runtime(1, tier="serial", ring_capacity=n_desc + 1,
+                         max_len=64, translation=translation)
+    pool = 1 << 16
+    rng = np.random.default_rng(seed + 2)
+    rt.register_pool("src", jnp.zeros(pool, jnp.float32))
+    rt.register_pool("dst", jnp.zeros(pool, jnp.float32))
+    lens = rng.integers(1, 64, n_desc)
+    srcs = rng.integers(0, pool - 64, n_desc)
+    dsts = rng.integers(0, pool - 64, n_desc)
+    d = from_segments(srcs, dsts, lens)
+
+    def dispatch_us() -> float:
+        t0 = time.perf_counter()
+        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.drain_until_idle()
+        return (time.perf_counter() - t0) / n_desc * 1e6
+
+    cold = dispatch_us()
+    warm = [dispatch_us() for _ in range(warm_rounds)]
+    return {
+        "descriptors_per_submit": n_desc,
+        "warm_rounds": warm_rounds,
+        "translation_enabled": translation,
+        "counters": rt.translation_stats(),
+        "wall_clock": {
+            "cold_dispatch_us_per_descriptor": float(cold),
+            "warm_dispatch_us_mean": float(np.mean(warm)),
+            "warm_dispatch_us_best": float(np.min(warm)),
+            "cold_over_warm_best": float(cold / max(min(warm), 1e-9)),
+        },
+    }
+
+
 def _bench_channels(mem_latency: int = 13, transfer_bytes: int = 64) -> dict:
     out = {}
     for n in (1, 2, 4, 8):
@@ -95,10 +138,11 @@ def _bench_coalescer(pages: int = 256, page_elems: int = 16,
     }
 
 
-def run(csv_rows: list, seed: int = 0) -> dict:
+def run(csv_rows: list, seed: int = 0, translation: bool = True) -> dict:
     launch = _bench_launch(seed=seed)
     chans = _bench_channels()
     coal = _bench_coalescer(seed=seed)
+    trans = _bench_translation(seed=seed, translation=translation)
     wall = launch["wall_clock"]
     csv_rows.append(("runtime_launch_per_desc",
                      wall["launch_us_per_descriptor_best"],
@@ -110,8 +154,14 @@ def run(csv_rows: list, seed: int = 0) -> dict:
                          f"ideal={c['ideal']:.3f}"))
     csv_rows.append(("runtime_coalesce", 0.0,
                      f"merge_ratio={coal['merge_ratio']:.2f}"))
+    twall = trans["wall_clock"]
+    csv_rows.append(("runtime_translation_dispatch",
+                     twall["warm_dispatch_us_best"],
+                     f"cold={twall['cold_dispatch_us_per_descriptor']:.2f}us/"
+                     f"warm={twall['warm_dispatch_us_mean']:.2f}us"))
     return {
         "launch": launch,
         "channels": chans,
         "coalescer": coal,
+        "translation": trans,
     }

@@ -86,9 +86,15 @@ def main(argv=None) -> int:
                          "sharded cells place shards on a real mesh, as "
                          "CI's sharded lane does; cells regenerate "
                          "bit-for-bit with or without it")
+    ap.add_argument("--no-translation-cache", action="store_true",
+                    help="escape hatch: run the legacy uncached dispatch "
+                         "path everywhere (runtime benches and the perf "
+                         "sweep); the resulting BENCH_perf.json records "
+                         "translation_cache_enabled=false")
     ap.add_argument("--out-dir", type=pathlib.Path, default=REPO_ROOT,
                     help="where to write BENCH_*.json")
     args = ap.parse_args(argv)
+    translation = not args.no_translation_cache
 
     if args.mesh:
         import jax
@@ -107,7 +113,8 @@ def main(argv=None) -> int:
     table2_area.run(csv_rows)
     table4_latency.run(csv_rows)
     bench_engine.run(csv_rows)
-    runtime_metrics = bench_runtime.run(csv_rows, seed=args.seed)
+    runtime_metrics = bench_runtime.run(csv_rows, seed=args.seed,
+                                        translation=translation)
     runtime_metrics["sharded"] = bench_sharded.run(csv_rows, seed=args.seed)
     roofline.run(csv_rows)
     print("name,us_per_call,derived")
@@ -123,7 +130,8 @@ def main(argv=None) -> int:
     if args.perf_mode != "skip":
         from repro.perf.sweep import default_spec, run_sweep, write_doc
         perf_out = args.out_dir / "BENCH_perf.json"
-        doc = run_sweep(default_spec(args.perf_mode, args.seed))
+        doc = run_sweep(default_spec(args.perf_mode, args.seed,
+                                     translation=translation))
         write_doc(doc, str(perf_out))
         print(f"wrote {perf_out}: {len(doc['cells'])} cells "
               f"(mode={args.perf_mode}, seed={args.seed})")

@@ -24,8 +24,12 @@ import pathlib
 import sys
 from typing import List, Optional, Sequence
 
-#: The headline wall-clock scalar the drift alert watches.
-DRIFT_METRIC = "launch_us_per_descriptor_mean"
+#: The wall-clock scalars the drift alert watches: submit launch cost and
+#: the warm-path dispatch cost through the chain-lowering translation
+#: cache (DESIGN.md §7) — the serve hot path's steady state.
+DRIFT_METRICS = ("launch_us_per_descriptor_mean", "warm_dispatch_us_mean")
+#: Headline metric echoed when a point is appended.
+DRIFT_METRIC = DRIFT_METRICS[0]
 #: Alert when the newest point exceeds the median of the trailing window
 #: by this factor in every one of the last ``DRIFT_RUNS`` runs.
 DRIFT_FACTOR = 1.5
@@ -33,17 +37,28 @@ DRIFT_RUNS = 3
 DRIFT_WINDOW = 10
 
 
+def _collect_wall_clock(bench: dict) -> dict:
+    """Merge every ``wall_clock`` section, searching one level deep.
+
+    run.py nests sections by benchmark name (``launch``, ``translation``,
+    …); each contributes scalars to one flat record so every drift metric
+    is trackable from a single series line. Key collisions are a document
+    bug — later sections win, which keeps tracking alive either way.
+    """
+    wall: dict = {}
+    if isinstance(bench.get("wall_clock"), dict):
+        wall.update(bench["wall_clock"])
+    for section in bench.values():
+        if isinstance(section, dict) \
+                and isinstance(section.get("wall_clock"), dict):
+            wall.update(section["wall_clock"])
+    return wall
+
+
 def append_point(series_path: pathlib.Path, bench: dict, *,
                  sha: str = "", run_id: str = "") -> dict:
     """Append one observation; returns the appended record."""
-    wall = bench.get("runtime", {}).get("wall_clock") \
-        or bench.get("wall_clock")
-    if not wall:
-        # Search one level deep: run.py nests sections by benchmark name.
-        for section in bench.values():
-            if isinstance(section, dict) and "wall_clock" in section:
-                wall = section["wall_clock"]
-                break
+    wall = _collect_wall_clock(bench)
     if not wall:
         raise SystemExit("no wall_clock section in the bench document")
     record = {
@@ -76,15 +91,13 @@ def load_series(series_path: pathlib.Path) -> List[dict]:
     return out
 
 
-def _metric(rec: dict) -> Optional[float]:
-    v = rec.get("wall_clock", {}).get(DRIFT_METRIC)
+def _metric(rec: dict, name: str = DRIFT_METRIC) -> Optional[float]:
+    v = rec.get("wall_clock", {}).get(name)
     return float(v) if isinstance(v, (int, float)) else None
 
 
-def check_drift(series: List[dict]) -> Optional[str]:
-    """Alert text when the last DRIFT_RUNS points all sit DRIFT_FACTOR
-    above the trailing-window median — sustained drift, not one noisy run."""
-    points = [m for m in (_metric(r) for r in series) if m is not None]
+def _check_one(series: List[dict], name: str) -> Optional[str]:
+    points = [m for m in (_metric(r, name) for r in series) if m is not None]
     if len(points) < DRIFT_RUNS + 1:
         return None
     recent = points[-DRIFT_RUNS:]
@@ -96,10 +109,24 @@ def check_drift(series: List[dict]) -> Optional[str]:
         return None
     if all(p > DRIFT_FACTOR * baseline for p in recent):
         return (f"sustained wall-clock drift: last {DRIFT_RUNS} runs of "
-                f"{DRIFT_METRIC} ({', '.join(f'{p:.2f}' for p in recent)} us)"
+                f"{name} ({', '.join(f'{p:.2f}' for p in recent)} us)"
                 f" all exceed {DRIFT_FACTOR}x the trailing median "
                 f"({baseline:.2f} us)")
     return None
+
+
+def check_drift(series: List[dict]) -> List[str]:
+    """Alert texts (one per watched metric) when the last DRIFT_RUNS
+    points all sit DRIFT_FACTOR above the trailing-window median —
+    sustained drift, not one noisy run. Metrics drift independently: a
+    cold-path (submit) regression and a warm-path (cached dispatch)
+    regression are different bugs and get different annotations."""
+    alerts = []
+    for name in DRIFT_METRICS:
+        a = _check_one(series, name)
+        if a:
+            alerts.append(a)
+    return alerts
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -117,10 +144,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     record = append_point(series_path, bench, sha=args.sha,
                           run_id=args.run_id)
     series = load_series(series_path)
-    print(f"appended point {len(series)} to {series_path}: "
-          f"{DRIFT_METRIC}={_metric(record)}")
-    alert = check_drift(series)
-    if alert:
+    shown = ", ".join(f"{m}={_metric(record, m)}" for m in DRIFT_METRICS)
+    print(f"appended point {len(series)} to {series_path}: {shown}")
+    for alert in check_drift(series):
         # GitHub annotation — visible on the run, but exit 0: tracked,
         # never gated (ROADMAP: wall-clock trend tracking).
         print(f"::warning::{alert}")

@@ -142,6 +142,7 @@ class ShardedDMARuntime:
         arbitration: str = "round_robin",
         backpressure: str = "block",
         speculation=None,
+        translation: bool = True,
     ):
         explicit_mesh = mesh is not None
         mesh = mesh if explicit_mesh else shardlib.current_mesh()
@@ -173,9 +174,11 @@ class ShardedDMARuntime:
                     for i in range(data_channels)]
             cfgs.append(ChannelConfig(name="completion", tier="control",
                                       ring_capacity=completion_ring))
+            # Per-shard translation caches: each shard lowers its own
+            # migration-hop and data chains (counters aggregate in stats()).
             self.shards.append(DMARuntime(
                 cfgs, arbitration=arbitration, backpressure=backpressure,
-                speculation=speculation))
+                speculation=speculation, translation=translation))
         self.max_len = max_len
         self._sharded_pools: Dict[str, PageOwnerMap] = {}
         self._row_elems: Dict[str, int] = {}
@@ -389,11 +392,18 @@ class ShardedDMARuntime:
         for rt in self.shards:
             rt.drain_until_idle(max_rounds)
 
+    def translation_stats(self) -> Dict[str, object]:
+        """Mesh-wide translation-cache counters (summed over shards)."""
+        from repro.runtime.lowering import aggregate_stats
+        return aggregate_stats(
+            [rt.translation_stats() for rt in self.shards])
+
     def stats(self) -> Dict[str, object]:
         return {
             "num_shards": self.num_shards,
             "migration": dataclasses.asdict(self.migration),
             "migration_chain_merge_ratio": self.migration.merge_ratio,
+            "translation_cache": self.translation_stats(),
             "shards": [rt.stats() for rt in self.shards],
         }
 
@@ -642,5 +652,8 @@ class ShardedServeEngine:
             "steps": max(p["steps"] for p in per),
             "completed": sum(p["completed"] for p in per),
             "admission_stalls": sum(p["admission_stalls"] for p in per),
+            # Mesh-wide translation-cache counters: per-engine blocks are
+            # in per_shard; this is their sum (DESIGN.md §7).
+            "translation_cache": self.rt.translation_stats(),
             "per_shard": per,
         }

@@ -67,6 +67,32 @@ def descriptor_copy(src_idx: jax.Array, dst_idx: jax.Array, src: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Bucketed variant: one compiled kernel per pow2 descriptor-count bucket.
+# ---------------------------------------------------------------------------
+
+def descriptor_copy_bucketed(src_idx: jax.Array, dst_idx: jax.Array,
+                             src: jax.Array, dst: jax.Array, *,
+                             n_bucket: int,
+                             interpret: bool = False) -> jax.Array:
+    """:func:`descriptor_copy` padded to a fixed grid of ``n_bucket`` steps.
+
+    The translation cache (:mod:`repro.runtime.lowering`) keys compiled
+    artifacts on pow2 segment-count buckets; padding the index operands
+    with ``-1`` (inactive — the kernel's ``pl.when`` gate skips them)
+    makes every chain in a bucket re-enter one compiled kernel instead of
+    recompiling per exact descriptor count.
+    """
+    n = src_idx.shape[0]
+    if n > n_bucket:
+        raise ValueError(f"{n} descriptors exceed bucket {n_bucket}")
+    if n < n_bucket:
+        pad = jnp.full((n_bucket - n,), -1, jnp.int32)
+        src_idx = jnp.concatenate([src_idx.astype(jnp.int32), pad])
+        dst_idx = jnp.concatenate([dst_idx.astype(jnp.int32), pad])
+    return descriptor_copy(src_idx, dst_idx, src, dst, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # Chained variant: executes a linked list without pre-flattening, using the
 # pointer-doubled permutation from repro.core.chain.flatten_chain.
 # ---------------------------------------------------------------------------

@@ -109,5 +109,8 @@ def run_serve_cell(
     counters = {
         "serve": serve_counters,
         "speculation_depth": float(pc["speculation_depth"]),
+        # Deterministic translation-cache traffic of the engine's runtime
+        # (event counts only — no wall clock).
+        "translation_cache": dict(pc["translation_cache"]),
     }
     return metrics, counters

@@ -24,6 +24,13 @@ Each cell runs twice, once in each substrate:
    it on MoE dispatch storms, where backing off converts wasted
    speculative beats back into payload bandwidth.
 
+4. **Translation pass** (schema v4) — the runtime pass replays each
+   workload's chains over warm rounds and gates the steady-state
+   chain-lowering cache hit rate (DESIGN.md §7), while the cycle model
+   compares the §II-A next-field-serialized baseline frontend against a
+   cached-artifact frontend to gate ``translation_launch_speedup``.
+   ``--no-translation-cache`` regenerates the uncached legacy document.
+
 One additional **serve cell** (``kind: "serve"``) runs a reduced-config
 end-to-end :class:`repro.serve.ServeEngine` and gates continuous-batching
 scheduling metrics; see :mod:`repro.perf.serve_cell`.
@@ -64,11 +71,17 @@ from .sharded_cell import (
 )
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
-#: v3: sharded mesh cells (kind: "sharded", mesh in {1,2,4,8}) gating the
-#: cross-shard migration surface (DESIGN.md §6). v2 added the
-#: speculation-policy metrics (spec_bus_utilization_*) on every DMA cell
-#: plus the end-to-end serve cell. Older baselines must be regenerated.
-SCHEMA_VERSION = 3
+#: v4: chain-lowering translation-cache cells (DESIGN.md §7) — every DMA
+#: cell gains ``translation_cache_hit_rate`` (steady-state artifact-cache
+#: hit rate over warm replay rounds) and ``translation_launch_speedup``
+#: (cycle-model launch speedup of a cached lowered chain vs the §II-A
+#: next-field-serialized baseline frontend), and the document records
+#: ``translation_cache_enabled``. v3 added the sharded mesh cells
+#: (kind: "sharded", mesh in {1,2,4,8}) gating the cross-shard migration
+#: surface (DESIGN.md §6). v2 added the speculation-policy metrics
+#: (spec_bus_utilization_*) on every DMA cell plus the end-to-end serve
+#: cell. Older baselines must be regenerated.
+SCHEMA_VERSION = 4
 
 #: The gated perf surface of DMA cells. gate.py refuses documents missing
 #: any of these (serve cells gate SERVE_GATED_METRICS instead).
@@ -79,7 +92,17 @@ GATED_METRICS = (
     "speculation_hit_rate",
     "spec_bus_utilization_fixed4",
     "spec_bus_utilization_adaptive",
+    "translation_cache_hit_rate",
+    "translation_launch_speedup",
 )
+
+#: Warm replay rounds of the runtime pass: the workload's chains are
+#: resubmitted unchanged after the cold round, and the steady-state
+#: translation-cache hit rate is the artifact-cache hit fraction over the
+#: warm rounds alone (counter deltas, so cold-round compiles never dilute
+#: it). Ratio metrics (merge ratio, §II-C hit rate) are invariant under
+#: the replays — identical chains scale numerator and denominator alike.
+_WARM_ROUNDS = 3
 
 #: Frontends of the speculation-policy pass. The fixed config is the
 #: paper's Table-I speculation point through the policy layer; the
@@ -106,6 +129,11 @@ class SweepSpec:
     include_serve: bool = True
     mesh_sizes: Sequence[int] = MESH_SIZES
     include_sharded: bool = True
+    #: Chain-lowering JIT (DESIGN.md §7). False reproduces the uncached
+    #: legacy dispatch path: hit rate reports 0.0 and launch speedup 1.0,
+    #: so a disabled baseline is self-describing rather than vacuously
+    #: green.
+    translation: bool = True
 
     @property
     def scale(self) -> Scale:
@@ -124,6 +152,7 @@ def default_spec(
     include_serve: bool = True,
     mesh_sizes: Optional[Sequence[int]] = None,
     include_sharded: bool = True,
+    translation: bool = True,
 ) -> SweepSpec:
     if mode not in SCALES:
         raise ValueError(f"unknown mode {mode!r}; have {sorted(SCALES)}")
@@ -142,6 +171,7 @@ def default_spec(
         mesh_sizes=tuple(mesh_sizes if mesh_sizes is not None
                          else MESH_SIZES),
         include_sharded=include_sharded,
+        translation=translation,
     )
 
 
@@ -162,7 +192,8 @@ def _deterministic_counters(snapshot: Dict[str, object]) -> Dict[str, object]:
 
 
 def _run_runtime_pass(arch: str, workload: str, channels: int,
-                      scale: Scale, seed: int) -> Dict[str, object]:
+                      scale: Scale, seed: int, *,
+                      translation: bool = True) -> Dict[str, object]:
     cfg = get_config(arch)
     wl = generate(workload, cfg, scale, seed)
     probe = PerfProbe()
@@ -171,20 +202,41 @@ def _run_runtime_pass(arch: str, workload: str, channels: int,
                        ring_capacity=scale.ring_capacity,
                        max_len=scale.max_len)
          for i in range(channels)],
-        arbitration="round_robin", backpressure="block")
+        arbitration="round_robin", backpressure="block",
+        translation=translation)
     rt.attach_probe(probe)
     rt.register_pool("src", jnp.zeros(wl.pool_elems, jnp.float32))
     rt.register_pool("dst", jnp.zeros(wl.pool_elems, jnp.float32))
-    for d in wl.chains:
-        rt.submit(d, src_pool="src", dst_pool="dst", tier="serial")
-    rt.drain_until_idle()
+
+    def submit_all():
+        for d in wl.chains:
+            rt.submit(d, src_pool="src", dst_pool="dst", tier="serial")
+        rt.drain_until_idle()
+
+    submit_all()                       # cold round: plans + artifacts compile
+    cold = rt.translation_stats()
+    warm_rounds = _WARM_ROUNDS if translation else 0
+    for _ in range(warm_rounds):       # serve-shaped replays: same chains
+        submit_all()
+    warm = rt.translation_stats()
+    d_lookups = int(warm["lookups"]) - int(cold["lookups"])
+    d_hits = int(warm["hits"]) - int(cold["hits"])
+    steady_hit_rate = d_hits / d_lookups if d_lookups else 0.0
+
     st = rt.stats()
     return {
         "merge_ratio": float(st["coalesce_merge_ratio"]),
         "hit_rate": float(st["mean_input_hit_rate"]),
         "launch_us_per_descriptor": float(st["launch_us_per_descriptor"]),
+        "translation_hit_rate": float(steady_hit_rate),
         "transfer_bytes": wl.transfer_bytes,
-        "counters": _deterministic_counters(probe.snapshot()),
+        "counters": {
+            **_deterministic_counters(probe.snapshot()),
+            # Deterministic event counts of the chain-lowering JIT
+            # (DESIGN.md §7): artifact hit/miss/evict + plan-memo traffic
+            # over the cold round plus all warm replays.
+            "translation_cache": warm,
+        },
     }
 
 
@@ -216,6 +268,24 @@ def _speculation_pass(mem_latency: int, transfer_bytes: int,
     return metrics, trajectory
 
 
+def _translation_pass(mem_latency: int, transfer_bytes: int,
+                      num_transfers: int) -> float:
+    """Launch speedup of a cached lowered chain, from the cycle model.
+
+    ``SimConfig.base()`` pays §II-A's next-field serialization on every
+    descriptor fetch; ``SimConfig.translated_frontend()`` is the same bus
+    driven by a compiled artifact that already knows every address, so
+    fetches issue back-to-back. The ratio of total cycles is the gated
+    ``translation_launch_speedup`` — ≥1.66x at 64-byte-class units, the
+    paper's launch-latency claim carried over to the software cache.
+    """
+    base = simulate(SimConfig.base(), mem_latency, transfer_bytes,
+                    num_transfers=num_transfers)
+    translated = simulate(SimConfig.translated_frontend(), mem_latency,
+                          transfer_bytes, num_transfers=num_transfers)
+    return float(base.cycles / max(translated.cycles, 1))
+
+
 def run_sweep(spec: Optional[SweepSpec] = None, *,
               progress: bool = False) -> Dict[str, object]:
     """Execute the sweep; returns the BENCH_perf document (JSON-ready)."""
@@ -224,8 +294,11 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
     cells: Dict[str, Dict[str, object]] = {}
     # The speculation pass depends only on (L, transfer size, hit rate) —
     # all channel-independent — so memoize it across the channel axis, the
-    # same hoist the runtime pass gets across the latency axis.
+    # same hoist the runtime pass gets across the latency axis. The
+    # translation pass depends only on (L, transfer size), so it collapses
+    # even further.
     spec_cache: Dict[tuple, tuple] = {}
+    translation_cache_pass: Dict[tuple, float] = {}
 
     for arch in spec.archs:
         for workload in spec.workloads:
@@ -234,11 +307,14 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                 # once per repeat and fan metrics out over the L axis.
                 passes = [
                     _run_runtime_pass(arch, workload, channels, scale,
-                                      spec.seed + r)
+                                      spec.seed + r,
+                                      translation=spec.translation)
                     for r in range(spec.repeats)
                 ]
                 merge = float(np.median([p["merge_ratio"] for p in passes]))
                 hit = float(np.median([p["hit_rate"] for p in passes]))
+                cache_hit = float(np.median(
+                    [p["translation_hit_rate"] for p in passes]))
                 # transfer_bytes is a pure function of (arch, workload) —
                 # the cycle model sees nothing seed-dependent, so it runs
                 # once per cell, not once per repeat.
@@ -264,6 +340,15 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                     if spec_key not in spec_cache:
                         spec_cache[spec_key] = _speculation_pass(*spec_key)
                     spec_metrics, trajectory = spec_cache[spec_key]
+                    if spec.translation:
+                        tr_key = (mem_latency, transfer_bytes,
+                                  scale.sim_transfers)
+                        if tr_key not in translation_cache_pass:
+                            translation_cache_pass[tr_key] = \
+                                _translation_pass(*tr_key)
+                        speedup = translation_cache_pass[tr_key]
+                    else:
+                        speedup = 1.0
                     total = channels * scale.sim_transfers
                     key = cell_key(arch, workload, channels, mem_latency)
                     cells[key] = {
@@ -279,6 +364,8 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                                 float(sim.cycles / total),
                             "coalesce_merge_ratio": merge,
                             "speculation_hit_rate": hit,
+                            "translation_cache_hit_rate": cache_hit,
+                            "translation_launch_speedup": speedup,
                             **spec_metrics,
                         },
                         "speculation": trajectory,
@@ -288,6 +375,8 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                         print(f"  {key}: "
                               f"util={cells[key]['metrics']['bus_utilization']:.3f} "
                               f"merge={merge:.2f} hit={hit:.2f} "
+                              f"cache={cache_hit:.2f} "
+                              f"speedup={speedup:.2f}x "
                               f"spec(fixed4="
                               f"{spec_metrics['spec_bus_utilization_fixed4']:.3f}, "
                               f"adaptive="
@@ -331,6 +420,7 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
         "mode": spec.mode,
         "seed": spec.seed,
         "repeats": spec.repeats,
+        "translation_cache_enabled": spec.translation,
         "dimensions": {
             "archs": list(spec.archs),
             "workloads": list(spec.workloads),
@@ -359,6 +449,7 @@ def spec_from_doc(doc: Dict[str, object]) -> SweepSpec:
         include_serve=bool(dims.get("serve_cells")),
         mesh_sizes=dims.get("mesh_sizes", MESH_SIZES),
         include_sharded=bool(dims.get("sharded_cells")),
+        translation=bool(doc.get("translation_cache_enabled", True)),
     )
 
 
@@ -380,10 +471,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                       const="full", help="full baseline sweep")
     ap.set_defaults(mode="quick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-translation-cache", action="store_true",
+                    help="run the legacy uncached dispatch path (hit rate "
+                         "0.0, speedup 1.0; recorded in the document)")
     ap.add_argument("--progress", action="store_true")
     args = ap.parse_args(argv)
 
-    doc = run_sweep(default_spec(args.mode, args.seed),
+    doc = run_sweep(default_spec(args.mode, args.seed,
+                                 translation=not args.no_translation_cache),
                     progress=args.progress)
     write_doc(doc, args.out)
     print(f"wrote {args.out}: {len(doc['cells'])} cells "

@@ -20,6 +20,12 @@ from .instrumentation import (  # noqa: F401
     ChannelCounters,
     PerfProbe,
     ServeCounters,
+    TranslationCounters,
+)
+from .lowering import (  # noqa: F401
+    LoweredChain,
+    PlanResult,
+    TranslationCache,
 )
 from .scheduler import (  # noqa: F401
     DMARuntime,

@@ -76,6 +76,9 @@ class _Batch:
     descs: DescriptorArray
     src_pool: Optional[str]
     dst_pool: Optional[str]
+    # Compiled executor from the translation cache (repro.runtime.lowering);
+    # None drains through the legacy tier engine.
+    lowered: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -138,6 +141,7 @@ class Channel:
         *,
         src_pool: Optional[str] = None,
         dst_pool: Optional[str] = None,
+        lowered: Optional[object] = None,
     ) -> List[int]:
         """Push one chain into the ring; raises RingFull under backpressure."""
         n = d.num_descriptors
@@ -160,7 +164,7 @@ class Channel:
             self.probe.on_occupancy(self.name, occupancy)
         if self.cfg.tier != "control":
             self.pending.append(_Batch(list(map(int, tickets)), slots, d,
-                                       src_pool, dst_pool))
+                                       src_pool, dst_pool, lowered))
         return slots
 
     # -- execution ----------------------------------------------------------
@@ -204,7 +208,15 @@ class Channel:
         src = pools[b.src_pool]
         dst = pools[b.dst_pool]
         t0 = time.perf_counter()
-        pools[b.dst_pool] = self._execute(b.descs, src, dst)
+        out = None
+        if b.lowered is not None:
+            # Translation-cache fast path: a compiled artifact for this
+            # chain's signature. It declines (None) whenever substituting
+            # for the legacy engine could change a single bit.
+            out = b.lowered(b.descs, src, dst, max_len=self.cfg.max_len)
+        if out is None:
+            out = self._execute(b.descs, src, dst)
+        pools[b.dst_pool] = out
         dt = time.perf_counter() - t0
         for slot in b.slots:
             self.ring.mark_done(slot)

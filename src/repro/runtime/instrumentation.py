@@ -68,6 +68,17 @@ class ChannelCounters:
 
 
 @dataclasses.dataclass
+class TranslationCounters:
+    """Translation-cache events (chain-lowering JIT — DESIGN.md §7)."""
+
+    hits: int = 0          # artifact LRU hits (compiled executor reused)
+    misses: int = 0        # artifact LRU misses (new signature lowered)
+    evictions: int = 0     # artifacts dropped past the LRU bound
+    plan_hits: int = 0     # coalescer-plan memo hits (digest match)
+    plan_misses: int = 0   # plans computed fresh
+
+
+@dataclasses.dataclass
 class ServeCounters:
     """Serve-engine observations (one decode step = one event)."""
 
@@ -85,6 +96,7 @@ class PerfProbe:
     def __init__(self) -> None:
         self.channels: Dict[str, ChannelCounters] = {}
         self.serve = ServeCounters()
+        self.translation = TranslationCounters()
 
     def _ch(self, channel: str) -> ChannelCounters:
         c = self.channels.get(channel)
@@ -132,6 +144,23 @@ class PerfProbe:
         c.fused_batches += int(fused)
         c.drain_seconds += seconds
 
+    # -- translation-cache hooks ---------------------------------------------
+    def on_translation(self, event: str) -> None:
+        """One translation-cache event: hit/miss/evict/plan_hit/plan_miss."""
+        t = self.translation
+        if event == "hit":
+            t.hits += 1
+        elif event == "miss":
+            t.misses += 1
+        elif event == "evict":
+            t.evictions += 1
+        elif event == "plan_hit":
+            t.plan_hits += 1
+        elif event == "plan_miss":
+            t.plan_misses += 1
+        else:
+            raise ValueError(f"unknown translation event {event!r}")
+
     # -- serve-side hooks ----------------------------------------------------
     def on_serve_step(self, active_slots: int, seconds: float) -> None:
         self.serve.steps += 1
@@ -155,4 +184,5 @@ class PerfProbe:
             "channels": {name: dataclasses.asdict(c)
                          for name, c in sorted(self.channels.items())},
             "serve": dataclasses.asdict(self.serve),
+            "translation": dataclasses.asdict(self.translation),
         }

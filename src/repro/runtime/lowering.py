@@ -1,0 +1,468 @@
+"""Chain-lowering JIT: a signature-keyed translation cache for dispatch.
+
+The serve hot path submits structurally-identical descriptor chains step
+after step (page reads against new bases, expert rows for new tokens).
+Legacy dispatch re-plans each one with the Python coalescer and re-enters
+the engine through shape-polymorphic jit entry points. This module is the
+jace idiom applied to that path — translate once per abstract structure,
+re-dispatch the cached artifact cheaply:
+
+* :meth:`TranslationCache.plan` canonicalizes the chain
+  (:mod:`repro.core.signature`), memoizes the *coalescer plan* on the
+  chain's exact relative digest, and rebuilds the planned chain as pure
+  vector ops — bit-identical to :func:`repro.runtime.coalesce.coalesce`
+  (same descriptors, same stats), with the Python merge loop replaced by
+  ``reduceat``/``repeat`` vector passes on a miss and a table lookup on a
+  hit;
+* :meth:`TranslationCache.lower` maps the plan's bucketed
+  :class:`~repro.core.signature.ChainSignature` to a compiled
+  :class:`LoweredChain` executor under an LRU bound, counting
+  hit/miss/evict events into the attached
+  :class:`~repro.runtime.instrumentation.PerfProbe`;
+* :class:`LoweredChain` executes a planned chain through one of three
+  fixed-shape artifacts — an ordered ``fori_loop`` copy for overlapping
+  writes, a one-shot masked gather/scatter for disjoint chains, or the
+  Pallas descriptor-copy mega-kernel for aligned uniform-unit chains and
+  the fused ``blocked_2d`` drain. Operands are padded to the signature's
+  pow2 buckets, so every chain in a bucket re-enters the same compiled
+  code.
+
+Correctness contract: a lowered drain must be bit-identical to the legacy
+drain it replaces. ``LoweredChain.__call__`` therefore *declines* (returns
+``None``) whenever the legacy engine's semantics could differ from the
+oracle copy — the serial engine's fixed ``max_len`` window clamps near the
+pool tail — or when pool dtypes mismatch; the caller then falls back to
+the legacy path, trivially identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptor import (
+    CONFIG_IRQ_ENABLE,
+    DESCRIPTOR_BYTES,
+    DescriptorArray,
+)
+from repro.core.prefetch import estimate_hit_rate
+from repro.core.signature import (
+    CanonicalChain,
+    ChainSignature,
+    canonicalize,
+    pow2_bucket,
+    signature_of,
+)
+
+from .coalesce import CoalesceStats
+from .instrumentation import PerfProbe
+
+DEFAULT_ARTIFACT_ENTRIES = 64
+DEFAULT_PLAN_ENTRIES = 256
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape executors (module-level jits: shared across cache instances)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _vector_copy(src_off, dst_off, ln, src, dst, *, width: int):
+    """One-shot masked gather/scatter over a padded descriptor block.
+
+    Safe for any offsets (clip + ``mode="drop"``); padded entries carry
+    ``ln < 0`` and write nothing. Requires disjoint dst ranges for
+    chain-order equivalence — guaranteed by ``sig.overlap == False``.
+    """
+    offs = jnp.arange(width, dtype=jnp.int32)
+    lnc = jnp.maximum(ln, 0)
+    active = ln > 0
+    sidx = jnp.clip(src_off[:, None] + offs[None, :], 0, src.shape[0] - 1)
+    rows = src[sidx]
+    valid = (offs[None, :] < lnc[:, None]) & active[:, None]
+    didx = jnp.where(valid, dst_off[:, None] + offs[None, :], dst.shape[0])
+    return dst.at[didx.reshape(-1)].set(
+        jnp.where(valid, rows, 0).reshape(-1), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _serial_copy(src_off, dst_off, ln, src, dst, *, width: int):
+    """Chain-order copy: descriptor k's writes land after k-1's.
+
+    Reads come from the original ``src`` operand throughout (the engines
+    and the host oracle all snapshot the source pool before executing).
+    """
+    offs = jnp.arange(width, dtype=jnp.int32)
+    n = src_off.shape[0]
+
+    def body(k, buf):
+        valid = (offs < ln[k]) & (ln[k] > 0)
+        vals = src[jnp.clip(src_off[k] + offs, 0, src.shape[0] - 1)]
+        didx = jnp.where(valid, dst_off[k] + offs, buf.shape[0])
+        return buf.at[didx].set(jnp.where(valid, vals, 0), mode="drop")
+
+    return jax.lax.fori_loop(0, n, body, dst)
+
+
+def _pad_block(so: np.ndarray, do: np.ndarray, ln: np.ndarray,
+               n_pad: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad operands to the signature's descriptor bucket (ln == -1 idle)."""
+    pad = n_pad - so.shape[0]
+    if pad <= 0:
+        return so, do, ln
+    z = np.zeros(pad, so.dtype)
+    return (np.concatenate([so, z]), np.concatenate([do, z]),
+            np.concatenate([ln, np.full(pad, -1, ln.dtype)]))
+
+
+class LoweredChain:
+    """The compiled artifact for one signature bucket.
+
+    Callable as ``lowered(descs, src, dst, max_len=...) -> dst' | None``;
+    ``None`` means "not safe to substitute for the legacy engine here —
+    run the legacy path". ``dispatches`` counts successful substitutions
+    (one artifact, many dispatches, is the whole point).
+    """
+
+    def __init__(self, sig: ChainSignature):
+        self.sig = sig
+        if sig.tier == "blocked_2d":
+            self.mode = "rows2d"
+        elif sig.overlap:
+            self.mode = "serial"
+        else:
+            self.mode = "vector"
+        self.dispatches = 0
+
+    # -- row-pool artifact (fused blocked_2d drain) --------------------------
+    def _call_rows2d(self, d: DescriptorArray, src: jax.Array,
+                     dst: jax.Array) -> Optional[jax.Array]:
+        from repro.kernels.descriptor_copy import descriptor_copy_bucketed
+        from repro.kernels.ops import _interpret
+
+        shape = dst.shape
+        src2 = src.reshape(src.shape[0], -1)
+        dst2 = dst.reshape(dst.shape[0], -1)
+        if src2.shape[1] != dst2.shape[1] or src2.dtype != dst2.dtype:
+            return None
+        active = np.asarray(d.length) >= 0
+        sidx = np.where(active, np.asarray(d.src, np.int32), -1)
+        didx = np.where(active, np.asarray(d.dst, np.int32), -1)
+        self.dispatches += 1
+        out = descriptor_copy_bucketed(
+            jnp.asarray(sidx), jnp.asarray(didx), src2, dst2,
+            n_bucket=self.sig.n_class, interpret=_interpret())
+        return out.reshape(shape)
+
+    # -- linear-pool artifacts (serial tier) ---------------------------------
+    def __call__(self, d: DescriptorArray, src: jax.Array, dst: jax.Array,
+                 *, max_len: int = 0) -> Optional[jax.Array]:
+        if self.mode == "rows2d":
+            return self._call_rows2d(d, src, dst)
+        n = d.num_descriptors
+        if n > self.sig.n_class or src.ndim != 1 or dst.ndim != 1 \
+                or src.dtype != dst.dtype:
+            return None
+        so = np.asarray(d.src, np.int32)
+        do = np.asarray(d.dst, np.int32)
+        ln = np.asarray(d.length, np.int32)
+        if n and max_len > 0:
+            # Legacy-fidelity guard: execute_serial copies through a fixed
+            # max_len window whose dynamic_slice clamps near the pool tail,
+            # diverging from the oracle there. Decline rather than differ.
+            if int(so.max()) + max_len > src.shape[0] \
+                    or int(do.max()) + max_len > dst.shape[0]:
+                return None
+        so, do, ln = _pad_block(so, do, ln, self.sig.n_class)
+        unit = self.sig.unit
+        if (self.mode == "vector" and unit > 0 and self.sig.aligned
+                and src.shape[0] % unit == 0 and dst.shape[0] % unit == 0
+                and not np.any(so % unit) and not np.any(do % unit)):
+            from repro.kernels.descriptor_copy import descriptor_copy_bucketed
+            from repro.kernels.ops import _interpret
+            if not _interpret():
+                # Uniform aligned units on TPU: whole-row moves through the
+                # Pallas mega-kernel over the unit-reshaped pools.
+                sidx = jnp.asarray(np.where(ln == unit, so // unit, -1))
+                didx = jnp.asarray(np.where(ln == unit, do // unit, -1))
+                self.dispatches += 1
+                out = descriptor_copy_bucketed(
+                    sidx, didx, src.reshape(-1, unit), dst.reshape(-1, unit),
+                    n_bucket=self.sig.n_class, interpret=False)
+                return out.reshape(dst.shape)
+        fn = _serial_copy if self.mode == "serial" else _vector_copy
+        self.dispatches += 1
+        return fn(jnp.asarray(so), jnp.asarray(do), jnp.asarray(ln),
+                  src, dst, width=self.sig.unit_class)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized coalescer plan (bit-identical to runtime.coalesce.coalesce)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Plan:
+    """Memoized, base-address-relative coalescer output for one digest."""
+
+    n_in: int
+    n_out: int
+    merged: int
+    split: int
+    in_hit: float
+    out_hit: float
+    rel_src: np.ndarray
+    rel_dst: np.ndarray
+    length: np.ndarray
+    config: np.ndarray
+    sig0: ChainSignature     # tier=""/depth=0 template; rebound per call
+
+
+def _plan_relative(canon: CanonicalChain, max_len: int) -> _Plan:
+    """Merge + split + sequential layout as vector passes.
+
+    Element-wise contiguity against the predecessor is equivalent to the
+    legacy loop's check against the accumulated run end: a run's end
+    always equals its last member's end, so the transitive closure of the
+    pairwise predicate reproduces the greedy loop exactly.
+    """
+    irq = int(CONFIG_IRQ_ENABLE)
+    in_hit = estimate_hit_rate(canon.order * DESCRIPTOR_BYTES)
+    act = canon.length > 0
+    src, dst = canon.rel_src[act], canon.rel_dst[act]
+    ln, cfg = canon.length[act], canon.config[act]
+    n = int(ln.size)
+    if n == 0:
+        empty = np.zeros(0, np.int64)
+        sig0 = signature_of(
+            CanonicalChain(0, empty, empty, empty, empty, empty, 0, 0),
+            tier="")
+        return _Plan(canon.n_raw, 0, 0, 0, in_hit, 1.0,
+                     empty, empty, empty, empty, sig0)
+
+    mergeable = ((src[1:] == src[:-1] + ln[:-1])
+                 & (dst[1:] == dst[:-1] + ln[:-1])
+                 & (cfg[1:] == cfg[:-1])
+                 & ((cfg[:-1] & irq) == 0))
+    brk = np.empty(n, bool)
+    brk[0] = True
+    brk[1:] = ~mergeable
+    starts = np.flatnonzero(brk)
+    run_len = np.add.reduceat(ln, starts)
+    run_src, run_dst, run_cfg = src[starts], dst[starts], cfg[starts]
+
+    pieces = -(-run_len // max_len)          # ceil-div, run_len > 0
+    n_out = int(pieces.sum())
+    rep = np.repeat(np.arange(starts.size), pieces)
+    first = np.zeros(starts.size, np.int64)
+    np.cumsum(pieces[:-1], out=first[1:])
+    off = (np.arange(n_out, dtype=np.int64) - first[rep]) * max_len
+    o_src = run_src[rep] + off
+    o_dst = run_dst[rep] + off
+    o_len = np.minimum(run_len[rep] - off, max_len)
+    tail = off + o_len == run_len[rep]       # IRQ only once all bytes landed
+    o_cfg = np.where(tail, run_cfg[rep], run_cfg[rep] & ~irq)
+
+    sig0 = signature_of(
+        CanonicalChain(n_out, np.arange(n_out, dtype=np.int64),
+                       o_src - o_src[0], o_dst - o_dst[0],
+                       o_len, o_cfg, 0, 0),
+        tier="")
+    return _Plan(
+        n_in=canon.n_raw, n_out=n_out,
+        merged=n - int(starts.size), split=n_out - int(starts.size),
+        in_hit=in_hit,
+        out_hit=estimate_hit_rate(
+            np.arange(n_out, dtype=np.int64) * DESCRIPTOR_BYTES),
+        rel_src=o_src, rel_dst=o_dst, length=o_len, config=o_cfg,
+        sig0=sig0)
+
+
+# ---------------------------------------------------------------------------
+# The cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanResult:
+    """What :meth:`TranslationCache.plan` hands the scheduler."""
+
+    planned: DescriptorArray
+    stats: CoalesceStats
+    signature: ChainSignature
+    lowered: Optional[LoweredChain]
+    digest: bytes
+
+
+def disabled_stats() -> Dict[str, object]:
+    """The counter block reported when translation is switched off."""
+    return {"enabled": False, "hits": 0, "misses": 0, "evictions": 0,
+            "size": 0, "capacity": 0, "lookups": 0, "hit_rate": 0.0,
+            "plan_hits": 0, "plan_misses": 0}
+
+
+def aggregate_stats(blocks) -> Dict[str, object]:
+    """Sum per-shard translation-cache counter blocks (sharded serving)."""
+    out = disabled_stats()
+    for b in blocks:
+        out["enabled"] = out["enabled"] or bool(b.get("enabled"))
+        for k in ("hits", "misses", "evictions", "size", "capacity",
+                  "lookups", "plan_hits", "plan_misses"):
+            out[k] += int(b.get(k, 0))
+    out["hit_rate"] = out["hits"] / out["lookups"] if out["lookups"] else 0.0
+    return out
+
+
+class TranslationCache:
+    """Signature-keyed artifact LRU + digest-keyed plan memo."""
+
+    def __init__(self, max_entries: int = DEFAULT_ARTIFACT_ENTRIES,
+                 plan_entries: int = DEFAULT_PLAN_ENTRIES):
+        if max_entries < 1 or plan_entries < 1:
+            raise ValueError("cache bounds must be >= 1")
+        self.max_entries = max_entries
+        self.plan_entries = plan_entries
+        self._artifacts: "OrderedDict[ChainSignature, LoweredChain]" = \
+            OrderedDict()
+        self._plans: "OrderedDict[Tuple[bytes, int], _Plan]" = OrderedDict()
+        self._seq: "OrderedDict[bytes, bool]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.probe: Optional[PerfProbe] = None
+
+    # -- instrumentation -----------------------------------------------------
+    def attach_probe(self, probe: Optional[PerfProbe]) -> None:
+        self.probe = probe
+
+    def _event(self, event: str) -> None:
+        if self.probe is not None:
+            self.probe.on_translation(event)
+
+    def stats(self) -> Dict[str, object]:
+        lookups = self.hits + self.misses
+        return {
+            "enabled": True,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "size": len(self._artifacts),
+            "capacity": self.max_entries,
+            "lookups": lookups,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "plan_hits": self.plan_hits,
+            "plan_misses": self.plan_misses,
+        }
+
+    # -- plan memo -----------------------------------------------------------
+    def plan(self, d: DescriptorArray, *, max_len: int, spec_depth: int = 0,
+             tier: str = "serial", head: int = 0) -> Optional[PlanResult]:
+        """Coalesce ``d`` through the memo; None -> caller runs legacy.
+
+        The returned planned chain and stats are bit-identical to
+        ``coalesce(d, max_len=max_len, spec_depth=spec_depth)``; malformed
+        chains (cycles, bad links) decline so the legacy walker raises its
+        canonical error.
+        """
+        if max_len < 1 or spec_depth < 0:
+            return None
+        canon = canonicalize(d, head)
+        if canon is None:
+            return None
+        key = (canon.digest, int(max_len))
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+            self.plan_hits += 1
+            self._event("plan_hit")
+        else:
+            plan = _plan_relative(canon, max_len)
+            self._plans[key] = plan
+            self.plan_misses += 1
+            self._event("plan_miss")
+            while len(self._plans) > self.plan_entries:
+                self._plans.popitem(last=False)
+
+        if plan.n_out == 0:
+            planned = DescriptorArray.create(
+                np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.int64))
+        else:
+            planned = DescriptorArray.create(
+                plan.rel_src + canon.src_base,
+                plan.rel_dst + canon.dst_base,
+                plan.length, config=plan.config)
+        stats = CoalesceStats(
+            n_in=plan.n_in, n_out=plan.n_out, merged=plan.merged,
+            split=plan.split, input_hit_rate=plan.in_hit,
+            output_hit_rate=plan.out_hit, provisioned_slack=spec_depth)
+        sig = dataclasses.replace(
+            plan.sig0, tier=tier,
+            depth_class=pow2_bucket(spec_depth) if spec_depth else 0)
+        lowered = self.lower(sig) if tier == "serial" and plan.n_out else None
+        return PlanResult(planned, stats, sig, lowered, canon.digest)
+
+    # -- artifact LRU --------------------------------------------------------
+    def lower(self, sig: ChainSignature) -> LoweredChain:
+        """Artifact for a signature: LRU get-or-compile with counters."""
+        art = self._artifacts.get(sig)
+        if art is not None:
+            self._artifacts.move_to_end(sig)
+            self.hits += 1
+            self._event("hit")
+            return art
+        art = LoweredChain(sig)
+        self._artifacts[sig] = art
+        self.misses += 1
+        self._event("miss")
+        while len(self._artifacts) > self.max_entries:
+            self._artifacts.popitem(last=False)
+            self.evictions += 1
+            self._event("evict")
+        return art
+
+    # -- fused blocked_2d route ---------------------------------------------
+    def execute_rows_2d(self, d: DescriptorArray, src: jax.Array,
+                        dst: jax.Array) -> Optional[jax.Array]:
+        """Lowered drain for a fused row-move batch; None -> legacy path.
+
+        Engages only on TPU (interpret-mode Pallas would serialize the
+        grid in Python) and only when every active destination row is
+        unique — duplicate rows rely on the legacy scatter's resolution
+        order, which the in-order kernel grid must not silently change.
+        """
+        from repro.kernels.ops import _interpret
+        if _interpret() or src.ndim < 2 or dst.ndim < 2:
+            return None
+        if src.reshape(src.shape[0], -1).shape[1] \
+                != dst.reshape(dst.shape[0], -1).shape[1] \
+                or src.dtype != dst.dtype:
+            return None
+        ad = np.asarray(d.dst)[np.asarray(d.length) >= 0]
+        if np.unique(ad).size != ad.size:
+            return None
+        sig = ChainSignature(
+            tier="blocked_2d", n_class=pow2_bucket(d.num_descriptors),
+            unit_class=1, layout="gather", unit=1, overlap=False,
+            aligned=True, depth_class=0)
+        return self.lower(sig)(d, src, dst)
+
+    # -- memoized chain-shape predicates (scheduler satellites) --------------
+    def is_sequential(self, d: DescriptorArray) -> bool:
+        """Digest-memoized `nxt == [1..n-1, -1]` check."""
+        key = np.asarray(d.nxt, np.int64).tobytes()
+        hit = self._seq.get(key)
+        if hit is not None:
+            self._seq.move_to_end(key)
+            return hit
+        n = d.num_descriptors
+        want = np.concatenate([np.arange(1, n), [-1]])
+        res = bool(np.array_equal(np.asarray(d.nxt), want))
+        self._seq[key] = res
+        while len(self._seq) > self.plan_entries:
+            self._seq.popitem(last=False)
+        return res

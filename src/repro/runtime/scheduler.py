@@ -22,6 +22,7 @@ mirroring the paper's launch-latency measurement (1.66x claim).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -48,6 +49,7 @@ from .channel import (
 from .coalesce import CoalesceStats, coalesce
 from .completion import CompletionQueue, CompletionRecord
 from .instrumentation import PerfProbe
+from .lowering import TranslationCache, disabled_stats
 from .ring import RingFull
 
 
@@ -76,16 +78,18 @@ def _is_sequential_chain(d: DescriptorArray) -> bool:
     return bool(np.array_equal(np.asarray(d.nxt), want))
 
 
+@functools.lru_cache(maxsize=256)
+def _split_bounds(n: int, piece: int) -> Tuple[Tuple[int, int], ...]:
+    """Memoized cut points for ring-sized chunking (shape-only)."""
+    return tuple((lo, min(lo + piece, n)) for lo in range(0, n, piece))
+
+
 def _split_chain(d: DescriptorArray, piece: int) -> List[DescriptorArray]:
     """Cut a chain into ring-sized sequentially-chained pieces."""
-    n = d.num_descriptors
-    out = []
-    for lo in range(0, n, piece):
-        hi = min(lo + piece, n)
-        out.append(DescriptorArray.create(
-            d.src[lo:hi], d.dst[lo:hi], d.length[lo:hi],
-            config=d.config[lo:hi]))
-    return out
+    return [DescriptorArray.create(
+        d.src[lo:hi], d.dst[lo:hi], d.length[lo:hi],
+        config=d.config[lo:hi])
+        for lo, hi in _split_bounds(d.num_descriptors, piece)]
 
 
 class DMARuntime:
@@ -97,6 +101,7 @@ class DMARuntime:
         backpressure: str = "block",        # "block" | "spill"
         coalesce_max_len: int = 1 << 20,
         speculation: Optional[PolicyLike] = None,
+        translation: "bool | TranslationCache" = True,
     ):
         if not channels:
             raise ValueError("need at least one channel")
@@ -121,6 +126,17 @@ class DMARuntime:
             raise ValueError(f"unknown arbitration {arbitration!r}")
         self.backpressure = backpressure
         self.coalesce_max_len = coalesce_max_len
+        # Chain-lowering JIT (DESIGN.md §7): signature-keyed cache of
+        # compiled drain executors + digest-keyed coalescer-plan memo.
+        # True builds a private cache; a TranslationCache instance may be
+        # shared across runtimes (sharded serving); False disables lowering
+        # entirely (the --no-translation-cache A/B escape hatch).
+        if translation is True:
+            self.translation: Optional[TranslationCache] = TranslationCache()
+        elif translation is False or translation is None:
+            self.translation = None
+        else:
+            self.translation = translation
         self.probe: Optional[PerfProbe] = None
         self.pools: Dict[str, jax.Array] = {}
         self._spill: Deque[_Spilled] = deque()
@@ -144,6 +160,8 @@ class DMARuntime:
         self.probe = probe
         for ch in self.channels.values():
             ch.probe = probe
+        if self.translation is not None:
+            self.translation.attach_probe(probe)
 
     # -- pools --------------------------------------------------------------
     def register_pool(self, name: str, array: jax.Array) -> None:
@@ -191,6 +209,7 @@ class DMARuntime:
         ch = self.channels[name]
 
         stats: Optional[CoalesceStats] = None
+        lowered = None
         if run_coalescer is None:
             # Row-move and control streams have positional semantics the
             # merge pass must not disturb; linear-byte tiers benefit.
@@ -203,8 +222,22 @@ class DMARuntime:
             # layout slack the channel's policy currently wants, then the
             # measured input hit rate feeds back and may move the depth —
             # for the *next* submission, never this one.
-            d, stats = coalesce(d, max_len=max_len,
-                                spec_depth=ch.speculation_depth)
+            planned = None
+            if self.translation is not None:
+                # Chain-lowering fast path (DESIGN.md §7): plan through
+                # the digest-keyed memo (bit-identical to coalesce) and
+                # pick up the signature's compiled drain executor. A None
+                # plan (malformed chain) falls back to the legacy walker,
+                # which raises the canonical error.
+                planned = self.translation.plan(
+                    d, max_len=max_len, spec_depth=ch.speculation_depth,
+                    tier=ch.cfg.tier)
+            if planned is not None:
+                d, stats, lowered = (planned.planned, planned.stats,
+                                     planned.lowered)
+            else:
+                d, stats = coalesce(d, max_len=max_len,
+                                    spec_depth=ch.speculation_depth)
             self.coalesce_in += stats.n_in
             self.coalesce_out += stats.n_out
             self._hit_rates.append(stats.input_hit_rate)
@@ -227,12 +260,16 @@ class DMARuntime:
         # `nxt` links cannot be cut, so reject it loudly instead of hanging.
         chunks = [d]
         if n > ch.ring.capacity:
-            if ch.cfg.tier == "serial" and not _is_sequential_chain(d):
+            sequential = (self.translation.is_sequential(d)
+                          if self.translation is not None
+                          else _is_sequential_chain(d))
+            if ch.cfg.tier == "serial" and not sequential:
                 raise ValueError(
                     f"chain of {n} descriptors exceeds ring capacity "
                     f"{ch.ring.capacity} and is not sequentially linked; "
                     "coalesce it or enlarge the ring")
             chunks = _split_chain(d, ch.ring.capacity)
+            lowered = None   # pieces have new shapes; drain them legacy
 
         tickets = self._take_tickets(n, name)
         if on_complete is not None:
@@ -247,7 +284,8 @@ class DMARuntime:
             while True:
                 try:
                     ch.submit(piece, piece_tickets,
-                              src_pool=src_pool, dst_pool=dst_pool)
+                              src_pool=src_pool, dst_pool=dst_pool,
+                              lowered=lowered)
                     break
                 except RingFull:
                     if self.backpressure == "block":
@@ -366,8 +404,16 @@ class DMARuntime:
             config=jnp.concatenate([d.config for d in descs]),
         )
         t0 = time.perf_counter()
-        out, _ = execute_blocked_2d(
-            fused, self.pools[src_name], self.pools[dst_name])
+        out = None
+        if self.translation is not None:
+            # Lowered fused drain: the whole multi-channel batch through
+            # one bucketed Pallas mega-kernel (declines off-TPU and on
+            # duplicate destination rows — legacy path is authoritative).
+            out = self.translation.execute_rows_2d(
+                fused, self.pools[src_name], self.pools[dst_name])
+        if out is None:
+            out, _ = execute_blocked_2d(
+                fused, self.pools[src_name], self.pools[dst_name])
         dt = time.perf_counter() - t0
         self.pools[dst_name] = out
         # The fused call's wall-clock is apportioned per batch by descriptor
@@ -405,6 +451,12 @@ class DMARuntime:
                 for name, ch in self.channels.items()}
 
     # -- stats ---------------------------------------------------------------
+    def translation_stats(self) -> Dict[str, object]:
+        """Translation-cache counters (zeros + enabled=False when off)."""
+        if self.translation is None:
+            return disabled_stats()
+        return self.translation.stats()
+
     def stats(self) -> Dict[str, object]:
         per_channel = {
             name: dataclasses.asdict(ch.stats)
@@ -422,6 +474,7 @@ class DMARuntime:
                 float(np.mean(self._hit_rates)) if self._hit_rates else 1.0,
             "spilled": len(self._spill),
             "completions_delivered": self.completion.delivered,
+            "translation_cache": self.translation_stats(),
         }
 
 
@@ -433,6 +486,7 @@ def default_runtime(
     arbitration: str = "round_robin",
     backpressure: str = "block",
     speculation: Optional[PolicyLike] = None,
+    translation: "bool | TranslationCache" = True,
     **channel_kw,
 ) -> DMARuntime:
     """N homogeneous channels — the common serving configuration."""
@@ -440,4 +494,5 @@ def default_runtime(
                           ring_capacity=ring_capacity, **channel_kw)
             for i in range(n_channels)]
     return DMARuntime(cfgs, arbitration=arbitration,
-                      backpressure=backpressure, speculation=speculation)
+                      backpressure=backpressure, speculation=speculation,
+                      translation=translation)

@@ -119,6 +119,9 @@ class ServeEngine:
             # policy's current decision).
             "speculation_depth":
                 float(np.mean(list(depths.values()))) if depths else 0.0,
+            # Chain-lowering JIT counters of the runtime under this engine
+            # (DESIGN.md §7): artifact hit/miss/evict + plan-memo traffic.
+            "translation_cache": self.runtime.translation_stats(),
         }
 
     # -- API -------------------------------------------------------------------

@@ -99,24 +99,33 @@ def test_sweep_document_is_bit_for_bit_deterministic():
 
 def test_sweep_document_schema_and_counters():
     doc = run_sweep(_mini_spec())
-    assert doc["schema_version"] == 3
+    assert doc["schema_version"] == 4
+    assert doc["translation_cache_enabled"] is True
     assert doc["cells"]
     for key, cell in doc["cells"].items():
         assert cell["kind"] == "dma"
         assert set(cell["metrics"]) == {
             "bus_utilization", "launch_cycles_per_transfer",
             "coalesce_merge_ratio", "speculation_hit_rate",
-            "spec_bus_utilization_fixed4", "spec_bus_utilization_adaptive"}
+            "spec_bus_utilization_fixed4", "spec_bus_utilization_adaptive",
+            "translation_cache_hit_rate", "translation_launch_speedup"}
         assert 0.0 < cell["metrics"]["bus_utilization"] <= 1.0
         assert cell["metrics"]["coalesce_merge_ratio"] >= 1.0
         assert 0.0 < cell["metrics"]["spec_bus_utilization_fixed4"] <= 1.0
         assert 0.0 < cell["metrics"]["spec_bus_utilization_adaptive"] <= 1.0
+        assert 0.0 <= cell["metrics"]["translation_cache_hit_rate"] <= 1.0
+        assert cell["metrics"]["translation_launch_speedup"] >= 1.0
         # the speculation pass stores its depth trajectory for forensics
         assert set(cell["speculation"]) == {"fixed4", "adaptive"}
         assert cell["speculation"]["fixed4"]["final_depth"] == 4
-        # counters come from the runtime's own probe, wall-clock stripped
+        # counters come from the runtime's own probe, wall-clock stripped,
+        # plus the translation-cache event counts (DESIGN.md §7)
         assert cell["counters"], key
-        for ch in cell["counters"].values():
+        assert cell["counters"]["translation_cache"]["enabled"] is True
+        assert cell["counters"]["translation_cache"]["lookups"] > 0
+        for name, ch in cell["counters"].items():
+            if name == "translation_cache":
+                continue
             assert "drain_seconds" not in ch and "launch_seconds" not in ch
             assert ch["drained_descriptors"] == ch["submitted_descriptors"]
 
@@ -124,9 +133,10 @@ def test_sweep_document_schema_and_counters():
 def test_sweep_counters_show_real_channel_activity():
     doc = run_sweep(_mini_spec())
     cell = next(iter(doc["cells"].values()))
-    total = sum(c["submits"] for c in cell["counters"].values())
+    total = sum(c["submits"] for name, c in cell["counters"].items()
+                if name != "translation_cache")
     assert total > 0
-    assert len(cell["counters"]) >= 2    # round-robin spread the bursts
+    assert len(cell["counters"]) >= 3    # >=2 channels + translation_cache
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +172,7 @@ def test_committed_baseline_upholds_adaptive_claim():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_perf.json"
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == 3
+    assert doc["schema_version"] == 4
     checked = 0
     for key, cell in doc["cells"].items():
         if cell.get("kind") != "dma":

@@ -38,7 +38,8 @@ def _doc(cells=None):
 
 
 def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95,
-          spec_fixed=0.6, spec_adaptive=0.62):
+          spec_fixed=0.6, spec_adaptive=0.62,
+          cache_hit=1.0, speedup=2.4):
     return {
         "kind": "dma",
         "arch": "archA", "workload": "paged_kv",
@@ -50,6 +51,8 @@ def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95,
             "speculation_hit_rate": hit,
             "spec_bus_utilization_fixed4": spec_fixed,
             "spec_bus_utilization_adaptive": spec_adaptive,
+            "translation_cache_hit_rate": cache_hit,
+            "translation_launch_speedup": speedup,
         },
         "counters": {},
     }
