@@ -99,6 +99,68 @@ def _bench_translation(n_desc: int = 256, warm_rounds: int = 5,
     }
 
 
+def _bench_tracing(n_desc: int = 256, rounds: int = 5, seed: int = 0) -> dict:
+    """Dispatch cost with the tracer detached / attached-but-sampled-out /
+    fully recording (DESIGN.md §8).
+
+    The observability contract is off-by-default-cheap: every hook site is
+    one attribute test when no tracer is attached, and one sampling hash
+    when one is attached at rate 0. ``tracing_off_overhead_ratio`` is the
+    metric the overhead guard test bounds (<= 2%) and the wall-clock trend
+    lane watches; rounds interleave the three variants so machine noise
+    hits them equally.
+    """
+    from repro.obs.trace import Tracer
+
+    pool = 1 << 16
+    rng = np.random.default_rng(seed + 3)
+    lens = rng.integers(1, 64, n_desc)
+    srcs = rng.integers(0, pool - 64, n_desc)
+    dsts = rng.integers(0, pool - 64, n_desc)
+    d = from_segments(srcs, dsts, lens)
+
+    def make_rt(tracer):
+        rt = default_runtime(2, tier="serial", ring_capacity=n_desc + 1,
+                             max_len=64)
+        rt.register_pool("src", jnp.zeros(pool, jnp.float32))
+        rt.register_pool("dst", jnp.zeros(pool, jnp.float32))
+        if tracer is not None:
+            rt.attach_tracer(tracer)
+        return rt
+
+    def dispatch_us(rt) -> float:
+        t0 = time.perf_counter()
+        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.drain_until_idle()
+        return (time.perf_counter() - t0) / n_desc * 1e6
+
+    variants = {
+        "none": make_rt(None),
+        "off": make_rt(Tracer(sample_rate=0.0, seed=seed)),
+        "on": make_rt(Tracer(sample_rate=1.0, seed=seed)),
+    }
+    for rt in variants.values():      # warm the translation caches
+        dispatch_us(rt)
+    us = {k: [] for k in variants}
+    for _ in range(rounds):
+        for k, rt in variants.items():
+            us[k].append(dispatch_us(rt))
+    best = {k: float(np.min(v)) for k, v in us.items()}
+    return {
+        "descriptors_per_submit": n_desc,
+        "rounds": rounds,
+        "wall_clock": {
+            "dispatch_us_tracing_none_best": best["none"],
+            "dispatch_us_tracing_off_best": best["off"],
+            "dispatch_us_tracing_on_best": best["on"],
+            "tracing_off_overhead_ratio":
+                best["off"] / max(best["none"], 1e-9),
+            "tracing_on_overhead_ratio":
+                best["on"] / max(best["none"], 1e-9),
+        },
+    }
+
+
 def _bench_channels(mem_latency: int = 13, transfer_bytes: int = 64) -> dict:
     out = {}
     for n in (1, 2, 4, 8):
@@ -143,6 +205,7 @@ def run(csv_rows: list, seed: int = 0, translation: bool = True) -> dict:
     chans = _bench_channels()
     coal = _bench_coalescer(seed=seed)
     trans = _bench_translation(seed=seed, translation=translation)
+    tracing = _bench_tracing(seed=seed)
     wall = launch["wall_clock"]
     csv_rows.append(("runtime_launch_per_desc",
                      wall["launch_us_per_descriptor_best"],
@@ -159,9 +222,15 @@ def run(csv_rows: list, seed: int = 0, translation: bool = True) -> dict:
                      twall["warm_dispatch_us_best"],
                      f"cold={twall['cold_dispatch_us_per_descriptor']:.2f}us/"
                      f"warm={twall['warm_dispatch_us_mean']:.2f}us"))
+    trwall = tracing["wall_clock"]
+    csv_rows.append(("runtime_tracing_dispatch",
+                     trwall["dispatch_us_tracing_off_best"],
+                     f"off/none={trwall['tracing_off_overhead_ratio']:.3f}/"
+                     f"on/none={trwall['tracing_on_overhead_ratio']:.3f}"))
     return {
         "launch": launch,
         "channels": chans,
         "coalescer": coal,
         "translation": trans,
+        "tracing": tracing,
     }

@@ -86,6 +86,11 @@ def main(argv=None) -> int:
                          "sharded cells place shards on a real mesh, as "
                          "CI's sharded lane does; cells regenerate "
                          "bit-for-bit with or without it")
+    ap.add_argument("--trace", metavar="OUT.trace.json",
+                    help="also record a seeded serve+simulator lifecycle "
+                         "trace (Perfetto/chrome://tracing JSON, DESIGN.md "
+                         "§8); includes sharded migration-hop flow arrows "
+                         "when --mesh >= 2")
     ap.add_argument("--no-translation-cache", action="store_true",
                     help="escape hatch: run the legacy uncached dispatch "
                          "path everywhere (runtime benches and the perf "
@@ -135,6 +140,13 @@ def main(argv=None) -> int:
         write_doc(doc, str(perf_out))
         print(f"wrote {perf_out}: {len(doc['cells'])} cells "
               f"(mode={args.perf_mode}, seed={args.seed})")
+
+    if args.trace:
+        from repro.obs.record import main as record_trace
+        rc = record_trace(["--out", args.trace, "--seed", str(args.seed),
+                           "--mesh", str(args.mesh or 1)])
+        if rc:
+            return rc
     return 0
 
 

@@ -24,10 +24,14 @@ import pathlib
 import sys
 from typing import List, Optional, Sequence
 
-#: The wall-clock scalars the drift alert watches: submit launch cost and
+#: The wall-clock scalars the drift alert watches: submit launch cost,
 #: the warm-path dispatch cost through the chain-lowering translation
-#: cache (DESIGN.md §7) — the serve hot path's steady state.
-DRIFT_METRICS = ("launch_us_per_descriptor_mean", "warm_dispatch_us_mean")
+#: cache (DESIGN.md §7) — the serve hot path's steady state — and the
+#: disabled-tracer dispatch overhead ratio (DESIGN.md §8: hook sites must
+#: stay one attribute test; a creeping ratio means someone put work on
+#: the tracing-off path).
+DRIFT_METRICS = ("launch_us_per_descriptor_mean", "warm_dispatch_us_mean",
+                 "tracing_off_overhead_ratio")
 #: Headline metric echoed when a point is appended.
 DRIFT_METRIC = DRIFT_METRICS[0]
 #: Alert when the newest point exceeds the median of the trailing window
@@ -109,9 +113,9 @@ def _check_one(series: List[dict], name: str) -> Optional[str]:
         return None
     if all(p > DRIFT_FACTOR * baseline for p in recent):
         return (f"sustained wall-clock drift: last {DRIFT_RUNS} runs of "
-                f"{name} ({', '.join(f'{p:.2f}' for p in recent)} us)"
+                f"{name} ({', '.join(f'{p:.2f}' for p in recent)})"
                 f" all exceed {DRIFT_FACTOR}x the trailing median "
-                f"({baseline:.2f} us)")
+                f"({baseline:.2f})")
     return None
 
 

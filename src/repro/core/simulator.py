@@ -578,6 +578,23 @@ def _channel_results(
     return chans, window
 
 
+def _trace_channels(tracer, track_prefix: str, launches, ends,
+                    shard_of: List[int]) -> None:
+    """Emit one cycle-clock payload span per simulated transfer.
+
+    Simulated cycles are their own clock domain (``clock="cycle"``): the
+    exporter renders them on separate tracks at 1 cycle == 1 µs, so a
+    sweep cell's bus behaviour loads in Perfetto next to (not interleaved
+    with) wall-clock runtime spans (DESIGN.md §8).
+    """
+    for c, (l, e) in enumerate(zip(launches, ends)):
+        track = f"{track_prefix}shard{shard_of[c]}/ch{c}" \
+            if len(set(shard_of)) > 1 else f"{track_prefix}ch{c}"
+        for i, (t0, t1) in enumerate(zip(l, e)):
+            tracer.complete("payload", track, float(t0), float(t1 - t0),
+                            clock="cycle", transfer=i)
+
+
 def simulate_multichannel(
     num_channels: int,
     mem_latency: int,
@@ -590,6 +607,8 @@ def simulate_multichannel(
     cross_fraction: float = 0.0,
     interconnect_latency: Optional[int] = None,
     seed: int = 0,
+    tracer=None,
+    trace_track_prefix: str = "sim/",
 ) -> MultiChannelResult:
     """N serialized frontends (base config) interleaved on shared buses.
 
@@ -625,9 +644,12 @@ def simulate_multichannel(
         if cross_fraction:
             raise ValueError("cross_fraction requires shard_of grouping")
         bus = _Bus(mem_latency)
-        launches, _, desc_beats, payload_beats, last_end = \
+        launches, ends, desc_beats, payload_beats, last_end = \
             _multichannel_pass(num_channels, bus, payload_beats_each,
                                num_transfers, weights)
+        if tracer is not None:
+            _trace_channels(tracer, trace_track_prefix, launches, ends,
+                            [0] * num_channels)
         chans, _ = _channel_results(
             launches, desc_beats, payload_beats, payload_beats_each,
             num_transfers, weights, [0] * num_channels)
@@ -662,6 +684,10 @@ def simulate_multichannel(
             desc_beats[c], payload_beats[c] = db[k], pb[k]
         last_end = max(last_end, le)
 
+    if tracer is not None:
+        _trace_channels(tracer, trace_track_prefix, launches, ends,
+                        list(shard_of))
+
     chans, window = _channel_results(
         launches, desc_beats, payload_beats, payload_beats_each,
         num_transfers, weights, list(shard_of))
@@ -687,6 +713,11 @@ def simulate_multichannel(
         _, hop_end = ibus.fetch(t + 1, hop_beats)
         added.append(hop_end - t)
         last_end = max(last_end, hop_end)
+        if tracer is not None:
+            tracer.complete("migration.hop",
+                            f"{trace_track_prefix}interconnect",
+                            float(t), float(hop_end - t), clock="cycle",
+                            beats=hop_beats)
     sharded = ShardedBusResult(
         num_shards=len(shards),
         per_shard_utilization=per_shard,
@@ -716,6 +747,7 @@ def simulate_sharded(
     cross_fraction: float = 0.0,
     interconnect_latency: Optional[int] = None,
     seed: int = 0,
+    tracer=None,
 ) -> MultiChannelResult:
     """S shard groups of N frontends each: the sharded runtime's bus model."""
     if num_shards < 1:
@@ -726,7 +758,8 @@ def simulate_sharded(
         num_shards * channels_per_shard, mem_latency, transfer_bytes,
         num_transfers=num_transfers, shard_of=shard_of,
         cross_fraction=cross_fraction if num_shards > 1 else 0.0,
-        interconnect_latency=interconnect_latency, seed=seed)
+        interconnect_latency=interconnect_latency, seed=seed,
+        tracer=tracer)
 
 
 def table_iv(mem_latencies=(1, 13, 100)) -> Dict[str, Dict]:

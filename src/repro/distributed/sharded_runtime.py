@@ -34,6 +34,7 @@ numbers are placement-independent and regenerate bit-for-bit anywhere.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -43,6 +44,8 @@ import numpy as np
 
 from repro.core.chain import from_segments
 from repro.core.prefetch import estimate_hit_rate
+from repro.obs.metrics import Histogram
+from repro.obs.trace import Tracer, monotonic
 from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
 
 from . import shardlib
@@ -184,6 +187,9 @@ class ShardedDMARuntime:
         self._row_elems: Dict[str, int] = {}
         self._pool_elems: Dict[str, int] = {}   # logical per-shard elements
         self.migration = MigrationStats()
+        self.tracer: Optional[Tracer] = None
+        self._trace_args: Dict[str, object] = {}
+        self._hop_seq = 0    # sampling key for hop spans (deterministic)
 
     # -- instrumentation -----------------------------------------------------
     def attach_probe(self, probe: Optional[PerfProbe]) -> None:
@@ -191,6 +197,33 @@ class ShardedDMARuntime:
         the probe's per-channel counters aggregate the mesh)."""
         for rt in self.shards:
             rt.attach_probe(probe)
+
+    def attach_tracer(self, tracer: Optional[Tracer]) -> None:
+        """Attach (or with None, detach) a lifecycle span tracer.
+
+        Every shard's runtime gets the same tracer under a ``shard{i}/``
+        track prefix, so an exported timeline shows one track group per
+        shard; migration hops additionally emit egress/fabric/ingress
+        spans linked by Perfetto flow arrows (DESIGN.md §8).
+        """
+        self.tracer = tracer
+        for s, rt in enumerate(self.shards):
+            rt.attach_tracer(tracer, track_prefix=f"shard{s}/")
+
+    @contextlib.contextmanager
+    def trace_context(self, **args):
+        """Parent subsequent hop spans to a logical originator.
+
+        The serve router wraps remote-page pull-ins in
+        ``trace_context(uid=...)`` so every egress/fabric/ingress span of
+        the resulting hops carries the originating request id.
+        """
+        prev = self._trace_args
+        self._trace_args = {**prev, **args}
+        try:
+            yield
+        finally:
+            self._trace_args = prev
 
     # -- pools ---------------------------------------------------------------
     def _place(self, shard: int, array: jax.Array) -> jax.Array:
@@ -341,11 +374,22 @@ class ShardedDMARuntime:
         n = len(rows_s)
         ctrl = dst_rt.submit_control(payload=src_shard,
                                      channel="completion")
+        # One flow arrow per hop (egress -> fabric -> ingress), sampled on
+        # the process-deterministic hop ordinal; the spans carry whatever
+        # the active trace_context says originated this hop (request uid).
+        tr = self.tracer
+        self._hop_seq += 1
+        rec = tr is not None and tr.sampled(("hop", self._hop_seq))
+        fid = tr.next_flow_id() if rec else 0
+        hop_args = dict(self._trace_args, src_shard=src_shard,
+                        dst_shard=dst_shard, pages=n) if rec else {}
+        first_pool = pool_names[0]
         for name in pool_names:
             row_elems = self._row_elems[name]
             stage_rows = np.arange(n, dtype=np.int64)
             # Egress: gather the moving pages into a dense staging buffer
             # on the source shard (the fabric's send window).
+            t0 = monotonic() if rec else 0.0
             src_rt.register_pool(
                 self.STAGE_POOL,
                 self._place(src_shard, self._pad(jnp.zeros(
@@ -357,10 +401,24 @@ class ShardedDMARuntime:
                 stats.chain_in += res.coalesce.n_in
                 stats.chain_out += res.coalesce.n_out
             src_rt.drain_until_idle()
+            t1 = monotonic() if rec else 0.0
+            if rec:
+                track = f"shard{src_shard}/migrate"
+                tr.complete("migrate.egress", track, t0 * 1e6,
+                            (t1 - t0) * 1e6, pool=name, **hop_args)
+                if name == first_pool:
+                    # Flow start binds to the egress slice just emitted.
+                    tr.flow_start("hop", track, fid, ts=t1 * 1e6 - 1e-3)
             # Fabric transfer: the staging buffer crosses to the
             # destination shard's device.
             stage = self._place(dst_shard, src_rt.pool(self.STAGE_POOL))
             dst_rt.register_pool(self.STAGE_POOL, stage)
+            t2 = monotonic() if rec else 0.0
+            if rec:
+                tr.complete("migrate.fabric", "fabric", t1 * 1e6,
+                            (t2 - t1) * 1e6, pool=name, **hop_args)
+                if name == first_pool:
+                    tr.flow_step("hop", "fabric", fid, ts=t2 * 1e6 - 1e-3)
             # Ingress: scatter staging rows onto the destination pages.
             d_in = self._chain(stage_rows, rows_d, row_elems)
             res = dst_rt.submit(d_in, src_pool=self.STAGE_POOL,
@@ -369,6 +427,13 @@ class ShardedDMARuntime:
                 stats.chain_in += res.coalesce.n_in
                 stats.chain_out += res.coalesce.n_out
             dst_rt.drain_until_idle()
+            if rec:
+                t3 = monotonic()
+                track = f"shard{dst_shard}/migrate"
+                tr.complete("migrate.ingress", track, t2 * 1e6,
+                            (t3 - t2) * 1e6, pool=name, **hop_args)
+                if name == first_pool:
+                    tr.flow_end("hop", track, fid, ts=t3 * 1e6 - 1e-3)
         # Per-hop completion: only after every pool's ingress chain
         # drained does the hop's control descriptor get its §II-D
         # writeback. It is observed via the non-destructive ring table
@@ -577,7 +642,9 @@ class ShardedServeEngine:
                 if self.kv.owner.owner(int(p)) != shard))
             if remote:
                 new_local = self.kv.alloc_on(shard, len(remote))
-                stats = self.kv.move_pages(remote, new_local)
+                # Hop spans of this pull-in carry the originating request.
+                with self.rt.trace_context(uid=req.uid):
+                    stats = self.kv.move_pages(remote, new_local)
                 # Counted only once the pull-in actually happened, so the
                 # counter always matches the merged migration stats.
                 self.remote_page_reads += len(remote)
@@ -642,8 +709,31 @@ class ShardedServeEngine:
         for eng in self.engines:
             eng.attach_probe(probe)
 
+    def attach_tracer(self, tracer: Optional[Tracer]) -> None:
+        """One tracer observes the whole mesh: per-shard serve loops on
+        ``shard{i}/serve`` tracks, runtimes under ``shard{i}/`` prefixes,
+        migration hops via the sharded runtime's flow spans."""
+        self.rt.attach_tracer(tracer)
+        for s, eng in enumerate(self.engines):
+            # The runtime tracks were already prefixed by rt.attach_tracer;
+            # re-prefixing here is idempotent (same prefix, same names).
+            eng.attach_tracer(tracer, track=f"shard{s}/serve",
+                              track_prefix=f"shard{s}/")
+
+    def request_latency_histogram(self) -> Histogram:
+        """Mesh-wide request latency: per-shard histograms merged.
+
+        The fixed bucket layout makes the merge plain element-wise count
+        addition — associative, so shard order never matters (DESIGN.md §8).
+        """
+        merged = Histogram()
+        for eng in self.engines:
+            merged.merge(eng.request_latency)
+        return merged
+
     def perf_counters(self) -> Dict[str, object]:
         per = [eng.perf_counters() for eng in self.engines]
+        latency = self.request_latency_histogram()
         return {
             "num_shards": self.rt.num_shards,
             "requests_per_shard": list(self.requests_per_shard),
@@ -652,6 +742,11 @@ class ShardedServeEngine:
             "steps": max(p["steps"] for p in per),
             "completed": sum(p["completed"] for p in per),
             "admission_stalls": sum(p["admission_stalls"] for p in per),
+            # Mesh-wide tail latency: per-shard histograms merged (steps
+            # are scheduling outcomes, so these are seed-deterministic).
+            "request_latency_steps_p50": latency.percentile(50),
+            "request_latency_steps_p99": latency.percentile(99),
+            "request_latency_steps": latency.snapshot(),
             # Mesh-wide translation-cache counters: per-engine blocks are
             # in per_shard; this is their sum (DESIGN.md §7).
             "translation_cache": self.rt.translation_stats(),

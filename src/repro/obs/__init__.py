@@ -1,0 +1,35 @@
+"""Observability subsystem: lifecycle tracing, metrics, Perfetto export.
+
+Layered *under* the existing ``PerfProbe`` (DESIGN.md §8): the probe keeps
+its deterministic scalar counters (gated in BENCH_perf.json), while this
+package adds
+
+* ``trace``   — ring-buffered span/event recorder with seeded sampling and
+  dual wall-clock / simulated-cycle timestamps;
+* ``metrics`` — counters, gauges, and mergeable fixed-bucket histograms
+  with exact small-integer percentiles;
+* ``export``  — Chrome/Perfetto ``trace_event`` JSON + flat JSONL metrics;
+* ``record``  — one-shot seeded serve/sharded/simulator trace recorder
+  (the ``benchmarks/run.py --trace`` and CI-artifact entrypoint).
+"""
+from repro.obs.export import (
+    chrome_trace,
+    write_chrome_trace,
+    write_metrics_jsonl,
+)
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import TraceEvent, Tracer, monotonic, monotonic_us
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "TraceEvent",
+    "Tracer",
+    "chrome_trace",
+    "monotonic",
+    "monotonic_us",
+    "write_chrome_trace",
+    "write_metrics_jsonl",
+]

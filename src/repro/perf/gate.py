@@ -70,6 +70,23 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
     # launch speedup comes from the cycle model, also deterministic.
     "translation_cache_hit_rate": 0.03,
     "translation_launch_speedup": 0.05,
+    # Serve tail latency (schema v5, DESIGN.md §8): medians move only when
+    # scheduling changes; the p99 band is wider because a single request's
+    # latency shift can move the tail of a small seeded cell.
+    "request_latency_steps_p50": 0.05,
+    "request_latency_steps_p99": 0.10,
+    # Per-percentile bands of the histogram-valued metric; overridable as
+    # --tolerance request_latency_steps.p95=0.2 etc.
+    "request_latency_steps.p50": 0.05,
+    "request_latency_steps.p95": 0.10,
+    "request_latency_steps.p99": 0.10,
+}
+
+#: Histogram-valued gated metrics (schema v5): the cell stores the full
+#: snapshot dict; the gate compares it at these named percentiles, each
+#: with its own tolerance band (keyed ``metric.percentile`` above).
+HISTOGRAM_METRICS: Dict[str, Sequence[str]] = {
+    "request_latency_steps": ("p50", "p95", "p99"),
 }
 
 #: +1 -> higher is better (regression = drop); -1 -> lower is better.
@@ -88,6 +105,9 @@ METRIC_POLARITY: Dict[str, int] = {
     "migration_chain_merge_ratio": +1,
     "translation_cache_hit_rate": +1,
     "translation_launch_speedup": +1,
+    "request_latency_steps_p50": -1,
+    "request_latency_steps_p99": -1,
+    "request_latency_steps": -1,   # applied at each gated percentile
 }
 
 ALL_GATED_METRICS = (tuple(GATED_METRICS) + tuple(SERVE_GATED_METRICS)
@@ -200,11 +220,40 @@ def compare(
                 raise GateError(
                     f"cell {key}: gated metric {metric!r} missing from "
                     "current run — the sweep stopped measuring it")
+            polarity = METRIC_POLARITY[metric]
+            if metric in HISTOGRAM_METRICS:
+                # Histogram-valued metric (schema v5): compare the stored
+                # snapshot at each named percentile, each under its own
+                # tolerance band. Absolute floor of one bucket absorbs
+                # integer-step jitter around tiny baselines (a 2-step p50
+                # moving to 3 is not a 50% regression worth failing on).
+                base_snap, cur_snap = base_metrics[metric], cur_metrics[metric]
+                if not isinstance(base_snap, dict) \
+                        or not isinstance(cur_snap, dict):
+                    raise GateError(
+                        f"cell {key}: metric {metric!r} should be a "
+                        "histogram snapshot dict in both documents; "
+                        "re-baseline (DESIGN.md §8)")
+                for pct in HISTOGRAM_METRICS[metric]:
+                    if pct not in base_snap or pct not in cur_snap:
+                        raise GateError(
+                            f"cell {key}: histogram metric {metric!r} "
+                            f"lacks percentile {pct!r}; re-baseline")
+                    base_v = float(base_snap[pct])
+                    cur_v = float(cur_snap[pct])
+                    denom = max(abs(base_v), 1e-12)
+                    rel = (cur_v - base_v) / denom
+                    band = tol.get(f"{metric}.{pct}", 0.10)
+                    if polarity * rel < -band and abs(cur_v - base_v) > 1.0:
+                        regressions.append(Regression(
+                            cell=key, metric=f"{metric}.{pct}",
+                            baseline=base_v, current=cur_v,
+                            rel_change=rel, tolerance=band))
+                continue
             base_v = float(base_metrics[metric])
             cur_v = float(cur_metrics[metric])
             denom = max(abs(base_v), 1e-12)
             rel = (cur_v - base_v) / denom
-            polarity = METRIC_POLARITY[metric]
             band = tol.get(metric, 0.05)
             if polarity * rel < -band:
                 regressions.append(Regression(
@@ -334,13 +383,45 @@ def translation_summary(doc: Dict[str, object]) -> str:
     return "\n".join(lines)
 
 
+def serve_latency_summary(doc: Dict[str, object]) -> str:
+    """p50/p99 request-latency table over the serve cells (DESIGN.md §8).
+
+    The tail-latency evidence the ROADMAP's continuous-batching work
+    gates on — printed with every verdict and into the CI job summary.
+    """
+    rows = []
+    for key, cell in sorted(doc["cells"].items()):
+        if cell.get("kind") != "serve":
+            continue
+        m = cell.get("metrics", {})
+        snap = m.get("request_latency_steps")
+        if not isinstance(snap, dict):
+            continue
+        rows.append((key, m.get("request_latency_steps_p50", float("nan")),
+                     snap.get("p95", float("nan")),
+                     m.get("request_latency_steps_p99", float("nan")),
+                     float(snap.get("sum", 0)) / max(int(snap.get("n", 0)), 1),
+                     int(snap.get("n", 0))))
+    if not rows:
+        return "serve latency: no serve-cell histograms in this document"
+    lines = ["serve latency: request p50/p99 (decode steps, exact buckets)",
+             f"  {'cell':<28} {'p50':>6}  {'p95':>6}  {'p99':>6}  "
+             f"{'mean':>7}  {'n':>4}"]
+    for key, p50, p95, p99, mean, n in rows:
+        lines.append(f"  {key:<28} {p50:>6.1f}  {p95:>6.1f}  {p99:>6.1f}  "
+                     f"{mean:>7.2f}  {n:>4d}")
+    return "\n".join(lines)
+
+
 def _emit_summary(doc: Dict[str, object]) -> None:
     spec_text = speculation_summary(doc)
     sharded_text = sharded_summary(doc)
     translation_text = translation_summary(doc)
+    serve_text = serve_latency_summary(doc)
     print(spec_text)
     print(sharded_text)
     print(translation_text)
+    print(serve_text)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if step_summary:
         with open(step_summary, "a") as f:
@@ -350,19 +431,23 @@ def _emit_summary(doc: Dict[str, object]) -> None:
                     "```\n" + sharded_text + "\n```\n")
             f.write("### Perf gate — translation cache\n\n"
                     "```\n" + translation_text + "\n```\n")
+            f.write("### Perf gate — serve request latency (p50/p99)\n\n"
+                    "```\n" + serve_text + "\n```\n")
 
 
 def _parse_tolerances(pairs: Sequence[str]) -> Dict[str, float]:
+    hist_keys = tuple(f"{m}.{p}" for m, pcts in HISTOGRAM_METRICS.items()
+                      for p in pcts)
     out: Dict[str, float] = {}
     for p in pairs:
         if "=" not in p:
             raise GateError(
                 f"--tolerance expects metric=fraction, got {p!r}")
         k, v = p.split("=", 1)
-        if k not in ALL_GATED_METRICS:
+        if k not in ALL_GATED_METRICS and k not in hist_keys:
             raise GateError(
                 f"--tolerance: unknown metric {k!r}; "
-                f"have {ALL_GATED_METRICS}")
+                f"have {ALL_GATED_METRICS + hist_keys}")
         try:
             out[k] = float(v)
         except ValueError:

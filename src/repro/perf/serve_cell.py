@@ -50,10 +50,16 @@ class ServeCellSpec:
 DEFAULT_SERVE_SPEC = ServeCellSpec()
 
 #: Gated serve-path metrics (all scheduling-deterministic; lower is better).
+#: ``request_latency_steps`` is histogram-valued (schema v5): the gate
+#: compares it at named percentiles with per-percentile tolerance, while
+#: the p50/p99 scalars gate directly (DESIGN.md §8).
 SERVE_GATED_METRICS = (
     "admission_stall_rate",
     "completion_poll_latency_steps",
     "serve_steps_per_request",
+    "request_latency_steps_p50",
+    "request_latency_steps_p99",
+    "request_latency_steps",
 )
 
 _WALL_CLOCK_SERVE_COUNTERS = ("step_seconds",)
@@ -101,6 +107,14 @@ def run_serve_cell(
         "completion_poll_latency_steps":
             float(pc["completion_poll_latency_steps"]),
         "serve_steps_per_request": float(pc["steps"] / spec.n_requests),
+        # Tail latency (schema v5): end-to-end submit -> §II-D writeback in
+        # decode steps. Steps are pure scheduling outcomes, so the whole
+        # histogram (and hence its percentiles) regenerates bit-for-bit;
+        # small-integer samples land in the width-1 linear buckets, making
+        # p50/p99 *exact*, not bucket-floor approximations.
+        "request_latency_steps_p50": float(pc["request_latency_steps_p50"]),
+        "request_latency_steps_p99": float(pc["request_latency_steps_p99"]),
+        "request_latency_steps": dict(pc["request_latency_steps"]),
     }
     serve_counters = {
         k: v for k, v in dataclasses.asdict(probe.serve).items()

@@ -71,9 +71,13 @@ from .sharded_cell import (
 )
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
-#: v4: chain-lowering translation-cache cells (DESIGN.md §7) — every DMA
-#: cell gains ``translation_cache_hit_rate`` (steady-state artifact-cache
-#: hit rate over warm replay rounds) and ``translation_launch_speedup``
+#: v5: serve-cell tail-latency histograms (DESIGN.md §8) — the serve cell
+#: gains ``request_latency_steps_p50``/``_p99`` scalars plus the
+#: histogram-valued ``request_latency_steps`` (fixed log2-bucket layout,
+#: gated at named percentiles with per-percentile tolerance). v4 added
+#: chain-lowering translation-cache cells (DESIGN.md §7): every DMA cell
+#: gains ``translation_cache_hit_rate`` (steady-state artifact-cache hit
+#: rate over warm replay rounds) and ``translation_launch_speedup``
 #: (cycle-model launch speedup of a cached lowered chain vs the §II-A
 #: next-field-serialized baseline frontend), and the document records
 #: ``translation_cache_enabled``. v3 added the sharded mesh cells
@@ -81,7 +85,7 @@ from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 #: surface (DESIGN.md §6). v2 added the speculation-policy metrics
 #: (spec_bus_utilization_*) on every DMA cell plus the end-to-end serve
 #: cell. Older baselines must be regenerated.
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 #: The gated perf surface of DMA cells. gate.py refuses documents missing
 #: any of these (serve cells gate SERVE_GATED_METRICS instead).
@@ -399,7 +403,8 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
         }
         if progress:
             print(f"  {serve_spec.cell_key}: " + " ".join(
-                f"{k}={v:.3f}" for k, v in serve_metrics.items()),
+                f"{k}={v:.3f}" for k, v in serve_metrics.items()
+                if isinstance(v, (int, float))),
                 file=sys.stderr)
 
     sharded_cells = []

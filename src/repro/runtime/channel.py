@@ -23,7 +23,6 @@ mirroring the fair RR bus arbiter of the paper's §III-A testbench.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -42,6 +41,8 @@ from repro.core.engine import (
     execute_blocked_2d,
     execute_serial,
 )
+
+from repro.obs.trace import Tracer, monotonic
 
 from .completion import CompletionQueue
 from .instrumentation import PerfProbe
@@ -102,6 +103,8 @@ class Channel:
         self.pending: Deque[_Batch] = deque()
         self.stats = ChannelStats()
         self.probe: Optional[PerfProbe] = None  # set via DMARuntime.attach_probe
+        self.tracer: Optional[Tracer] = None    # set via DMARuntime.attach_tracer
+        self.track = cfg.name                   # tracer track (shard-prefixed)
         # Per-channel speculation controller (DESIGN.md §5): the coalescer
         # asks it for layout slack before planning; the measured input hit
         # rate of each submission feeds back through observe_speculation.
@@ -155,6 +158,10 @@ class Channel:
             self.stats.ring_full_events += 1
             if self.probe is not None:
                 self.probe.on_ring_full(self.name)
+            tr = self.tracer
+            if tr is not None and tickets and tr.sampled(tickets[0]):
+                tr.instant("ring_full", self.track, ticket=int(tickets[0]),
+                           n=n)
             raise
         self.stats.submitted += n
         occupancy = self.ring.capacity - self.ring.free_slots
@@ -207,7 +214,7 @@ class Channel:
         b = self.pending.popleft()
         src = pools[b.src_pool]
         dst = pools[b.dst_pool]
-        t0 = time.perf_counter()
+        t0 = monotonic()
         out = None
         if b.lowered is not None:
             # Translation-cache fast path: a compiled artifact for this
@@ -217,7 +224,7 @@ class Channel:
         if out is None:
             out = self._execute(b.descs, src, dst)
         pools[b.dst_pool] = out
-        dt = time.perf_counter() - t0
+        dt = monotonic() - t0
         for slot in b.slots:
             self.ring.mark_done(slot)
         self.stats.drained += b.descs.num_descriptors
@@ -227,6 +234,16 @@ class Channel:
             self.probe.on_drain(self.name,
                                 n_descriptors=b.descs.num_descriptors,
                                 seconds=dt)
+        tr = self.tracer
+        if tr is not None and b.tickets and tr.sampled(b.tickets[0]):
+            tr.complete("drain", self.track, t0 * 1e6, dt * 1e6,
+                        ticket=b.tickets[0],
+                        n=b.descs.num_descriptors,
+                        lowered=b.lowered is not None)
+            # every slot of the batch just received its §II-D all-ones
+            # writeback (mark_done above) — one instant marks the batch
+            tr.instant("writeback", self.track, ticket=b.tickets[0],
+                       n_slots=len(b.slots))
         self._retire()
         return True
 

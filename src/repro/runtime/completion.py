@@ -18,6 +18,8 @@ import dataclasses
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.obs.trace import Tracer, monotonic
+
 from .ring import RingEntry
 
 
@@ -37,6 +39,8 @@ class CompletionQueue:
         self._callbacks: Dict[int, Callable[[CompletionRecord], None]] = {}
         self.delivered = 0
         self.dropped_irqless = 0
+        self.tracer: Optional[Tracer] = None  # set via DMARuntime.attach_tracer
+        self.track = "completion"
 
     def register(self, ticket: int,
                  callback: Callable[[CompletionRecord], None]) -> None:
@@ -60,6 +64,10 @@ class CompletionQueue:
             self._events.append(CompletionRecord(
                 ticket=e.ticket, channel=channel, slot=e.slot, irq=e.irq))
             n += 1
+        tr = self.tracer
+        if n and tr is not None and tr.sampled(entries[0].ticket):
+            tr.instant("retire", self.track, channel=channel, n_events=n,
+                       first_ticket=int(entries[0].ticket))
         return n
 
     def __len__(self) -> int:
@@ -67,6 +75,8 @@ class CompletionQueue:
 
     def poll(self, max_events: Optional[int] = None) -> List[CompletionRecord]:
         """Drain up to ``max_events`` records, firing callbacks in order."""
+        tr = self.tracer
+        t0 = monotonic() if tr is not None else 0.0
         out: List[CompletionRecord] = []
         while self._events and (max_events is None or len(out) < max_events):
             rec = self._events.popleft()
@@ -75,4 +85,8 @@ class CompletionQueue:
                 cb(rec)
             out.append(rec)
             self.delivered += 1
+        if out and tr is not None and tr.sampled(out[0].ticket):
+            tr.complete("completion.poll", self.track, t0 * 1e6,
+                        (monotonic() - t0) * 1e6,
+                        n_events=len(out), first_ticket=int(out[0].ticket))
         return out

@@ -26,11 +26,22 @@ drain batches — not re-derive those numbers from its own bookkeeping. A
 Probes never change behaviour: every hook is a no-op when no probe is
 attached, and a probe failure is a bug, not a recoverable condition (no
 exception guards — the probe is trusted first-party code).
+
+Alongside the scalar dataclass counters (which feed the *deterministic*
+``snapshot()`` gated in BENCH_perf.json), every probe owns a
+:class:`repro.obs.metrics.MetricsRegistry` of histograms/gauges fed from
+the same hooks — wall-clock distributions (launch/drain/step µs), ring
+occupancy, poll and request latencies. Those are exported separately via
+``metrics_snapshot()`` and the JSONL dump, **never** mixed into
+``snapshot()`` (wall-clock in the gated document would break bit-for-bit
+reproducibility — DESIGN.md §4/§8).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional
+
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -97,6 +108,19 @@ class PerfProbe:
         self.channels: Dict[str, ChannelCounters] = {}
         self.serve = ServeCounters()
         self.translation = TranslationCounters()
+        self.metrics = MetricsRegistry()
+
+    def reset(self) -> None:
+        """Clear *all* counters — channels, serve, translation, metrics.
+
+        Starts a fresh measurement window on the same probe object, so
+        long-lived runtimes can reuse one attached probe across windows
+        without re-plumbing ``attach_probe``.
+        """
+        self.channels.clear()
+        self.serve = ServeCounters()
+        self.translation = TranslationCounters()
+        self.metrics.reset()
 
     def _ch(self, channel: str) -> ChannelCounters:
         c = self.channels.get(channel)
@@ -117,11 +141,13 @@ class PerfProbe:
         if hit_rate is not None:
             c.hit_rate_sum += hit_rate
             c.hit_rate_n += 1
+        self.metrics.histogram("launch_us").record(launch_seconds * 1e6)
 
     def on_occupancy(self, channel: str, occupancy: int) -> None:
         c = self._ch(channel)
         if occupancy > c.occupancy_peak:
             c.occupancy_peak = occupancy
+        self.metrics.gauge(f"ring_occupancy.{channel}").set(occupancy)
 
     def on_ring_full(self, channel: str) -> None:
         self._ch(channel).ring_full_events += 1
@@ -143,6 +169,7 @@ class PerfProbe:
         c.drain_batches += 1
         c.fused_batches += int(fused)
         c.drain_seconds += seconds
+        self.metrics.histogram("drain_us").record(seconds * 1e6)
 
     # -- translation-cache hooks ---------------------------------------------
     def on_translation(self, event: str) -> None:
@@ -166,12 +193,19 @@ class PerfProbe:
         self.serve.steps += 1
         self.serve.active_slot_steps += active_slots
         self.serve.step_seconds += seconds
+        self.metrics.histogram("serve_step_us").record(seconds * 1e6)
+        self.metrics.gauge("serve_active_slots").set(active_slots)
 
     def on_serve_completion(self, n: int = 1,
                             latency_steps: Optional[int] = None) -> None:
         self.serve.completions_observed += n
         if latency_steps is not None:
             self.serve.poll_latency_steps_sum += latency_steps
+            self.metrics.histogram("poll_latency_steps").record(latency_steps)
+
+    def on_request_latency(self, steps: int) -> None:
+        """End-to-end request latency (submit -> completion, decode steps)."""
+        self.metrics.histogram("request_latency_steps").record(steps)
 
     def on_admission_stall(self) -> None:
         """One engine step that left requests queued behind full slots."""
@@ -179,10 +213,19 @@ class PerfProbe:
 
     # -- export --------------------------------------------------------------
     def snapshot(self) -> Dict[str, object]:
-        """JSON-ready counter dump (ints/floats only)."""
+        """JSON-ready counter dump (ints/floats only).
+
+        Deterministic-schema contract: the perf sweep stores parts of this
+        verbatim in BENCH_perf.json, so new observability surface goes in
+        ``metrics_snapshot()``, never here.
+        """
         return {
             "channels": {name: dataclasses.asdict(c)
                          for name, c in sorted(self.channels.items())},
             "serve": dataclasses.asdict(self.serve),
             "translation": dataclasses.asdict(self.translation),
         }
+
+    def metrics_snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Histogram/gauge registry dump (wall-clock-bearing; not gated)."""
+        return self.metrics.snapshot()

@@ -41,6 +41,8 @@ import functools
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
+from repro.obs.trace import monotonic
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -334,10 +336,16 @@ class TranslationCache:
         self.plan_hits = 0
         self.plan_misses = 0
         self.probe: Optional[PerfProbe] = None
+        self.tracer = None          # repro.obs.trace.Tracer, via attach_tracer
+        self.track = "translation"
 
     # -- instrumentation -----------------------------------------------------
     def attach_probe(self, probe: Optional[PerfProbe]) -> None:
         self.probe = probe
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach (or with None, detach) a lifecycle span tracer."""
+        self.tracer = tracer
 
     def _event(self, event: str) -> None:
         if self.probe is not None:
@@ -370,11 +378,16 @@ class TranslationCache:
         """
         if max_len < 1 or spec_depth < 0:
             return None
+        tr = self.tracer
+        rec = tr is not None and tr.sampled(self.plan_hits
+                                            + self.plan_misses)
+        p0 = monotonic() if rec else 0.0
         canon = canonicalize(d, head)
         if canon is None:
             return None
         key = (canon.digest, int(max_len))
         plan = self._plans.get(key)
+        plan_was_hit = plan is not None
         if plan is not None:
             self._plans.move_to_end(key)
             self.plan_hits += 1
@@ -404,21 +417,35 @@ class TranslationCache:
             plan.sig0, tier=tier,
             depth_class=pow2_bucket(spec_depth) if spec_depth else 0)
         lowered = self.lower(sig) if tier == "serial" and plan.n_out else None
+        if rec:
+            tr.complete("translate.plan", self.track, p0 * 1e6,
+                        (monotonic() - p0) * 1e6,
+                        result="plan_hit" if plan_was_hit else "plan_miss",
+                        digest=canon.digest[:6].hex(),
+                        n_out=plan.n_out)
         return PlanResult(planned, stats, sig, lowered, canon.digest)
 
     # -- artifact LRU --------------------------------------------------------
     def lower(self, sig: ChainSignature) -> LoweredChain:
         """Artifact for a signature: LRU get-or-compile with counters."""
+        tr = self.tracer
+        rec = tr is not None and tr.sampled(self.hits + self.misses)
         art = self._artifacts.get(sig)
         if art is not None:
             self._artifacts.move_to_end(sig)
             self.hits += 1
             self._event("hit")
+            if rec:
+                tr.instant("translate.hit", self.track, tier=sig.tier)
             return art
+        t0 = monotonic() if rec else 0.0
         art = LoweredChain(sig)
-        self._artifacts[sig] = art
         self.misses += 1
         self._event("miss")
+        if rec:
+            tr.complete("translate.compile", self.track, t0 * 1e6,
+                        (monotonic() - t0) * 1e6, tier=sig.tier)
+        self._artifacts[sig] = art
         while len(self._artifacts) > self.max_entries:
             self._artifacts.popitem(last=False)
             self.evictions += 1

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -39,6 +38,8 @@ from repro.core.speculation import (
     SpeculationPolicy,
     as_policy,
 )
+
+from repro.obs.trace import Tracer, monotonic
 
 from .channel import (
     Channel,
@@ -138,6 +139,7 @@ class DMARuntime:
         else:
             self.translation = translation
         self.probe: Optional[PerfProbe] = None
+        self.tracer: Optional[Tracer] = None
         self.pools: Dict[str, jax.Array] = {}
         self._spill: Deque[_Spilled] = deque()
         self._next_ticket = 0
@@ -162,6 +164,24 @@ class DMARuntime:
             ch.probe = probe
         if self.translation is not None:
             self.translation.attach_probe(probe)
+
+    def attach_tracer(self, tracer: Optional[Tracer], *,
+                      track_prefix: str = "") -> None:
+        """Attach (or with None, detach) a lifecycle span tracer.
+
+        Propagates to every channel, the completion queue, and the
+        translation cache. ``track_prefix`` namespaces this runtime's
+        tracks — the sharded runtime passes ``"shard{i}/"`` so an exported
+        timeline shows one track group per shard (DESIGN.md §8).
+        """
+        self.tracer = tracer
+        for ch in self.channels.values():
+            ch.tracer = tracer
+            ch.track = track_prefix + ch.name
+        self.completion.tracer = tracer
+        self.completion.track = track_prefix + "completion"
+        if self.translation is not None:
+            self.translation.attach_tracer(tracer)
 
     # -- pools --------------------------------------------------------------
     def register_pool(self, name: str, array: jax.Array) -> None:
@@ -203,8 +223,13 @@ class DMARuntime:
         submission always exists, so callers wanting one completion per
         logical transfer hang their callback on ``tickets[-1]``).
         """
-        t0 = time.perf_counter()
+        t0 = monotonic()
         n_raw = d.num_descriptors
+        # Sampling key = the first ticket this submission will take; the
+        # decision is made once here and reused by every child span.
+        tr = self.tracer
+        rec = tr is not None and tr.sampled(self._next_ticket)
+        first_ticket = self._next_ticket
         name = channel if channel is not None else self._pick_channel(tier)
         ch = self.channels[name]
 
@@ -222,6 +247,7 @@ class DMARuntime:
             # layout slack the channel's policy currently wants, then the
             # measured input hit rate feeds back and may move the depth —
             # for the *next* submission, never this one.
+            c0 = monotonic() if rec else 0.0
             planned = None
             if self.translation is not None:
                 # Chain-lowering fast path (DESIGN.md §7): plan through
@@ -242,14 +268,25 @@ class DMARuntime:
             self.coalesce_out += stats.n_out
             self._hit_rates.append(stats.input_hit_rate)
             ch.observe_speculation(stats.input_hit_rate)
+            if rec:
+                tr.complete("coalesce", ch.track, c0 * 1e6,
+                            (monotonic() - c0) * 1e6,
+                            ticket=first_ticket, n_in=stats.n_in,
+                            n_out=stats.n_out,
+                            hit_rate=stats.input_hit_rate,
+                            planned=planned is not None)
 
         n = d.num_descriptors
         if n == 0:
+            dt = monotonic() - t0
             if self.probe is not None:
                 self.probe.on_submit(
-                    name, n_in=n_raw, n_out=0,
-                    launch_seconds=time.perf_counter() - t0,
+                    name, n_in=n_raw, n_out=0, launch_seconds=dt,
                     hit_rate=stats.input_hit_rate if stats else None)
+            if rec:
+                tr.complete("submit", ch.track, t0 * 1e6, dt * 1e6,
+                            ticket=first_ticket, channel=name,
+                            n_in=n_raw, n_out=0)
             return SubmitResult([], name, False, stats)
 
         # A chain longer than the ring is submitted in ring-sized pieces
@@ -299,12 +336,16 @@ class DMARuntime:
                         spilled = True
                         break
         self.submitted_descriptors += n
-        launch = time.perf_counter() - t0
+        launch = monotonic() - t0
         self.launch_seconds += launch
         if self.probe is not None:
             self.probe.on_submit(
                 name, n_in=n_raw, n_out=n, launch_seconds=launch,
                 hit_rate=stats.input_hit_rate if stats else None)
+        if rec:
+            tr.complete("submit", ch.track, t0 * 1e6, launch * 1e6,
+                        ticket=tickets[0], channel=name,
+                        n_in=n_raw, n_out=n, spilled=spilled)
         return SubmitResult(tickets, name, spilled, stats)
 
     def submit_control(self, payload: int = 0, *,
@@ -403,7 +444,7 @@ class DMARuntime:
             nxt=jnp.concatenate([jnp.asarray(d.nxt) for d in descs]),
             config=jnp.concatenate([d.config for d in descs]),
         )
-        t0 = time.perf_counter()
+        t0 = monotonic()
         out = None
         if self.translation is not None:
             # Lowered fused drain: the whole multi-channel batch through
@@ -414,8 +455,14 @@ class DMARuntime:
         if out is None:
             out, _ = execute_blocked_2d(
                 fused, self.pools[src_name], self.pools[dst_name])
-        dt = time.perf_counter() - t0
+        dt = monotonic() - t0
         self.pools[dst_name] = out
+        tr = self.tracer
+        if tr is not None and items[0][1].tickets \
+                and tr.sampled(items[0][1].tickets[0]):
+            tr.complete("drain", items[0][0].track, t0 * 1e6, dt * 1e6,
+                        ticket=items[0][1].tickets[0],
+                        n=fused.num_descriptors, fused=True)
         # The fused call's wall-clock is apportioned per batch by descriptor
         # share, so per-channel drain_seconds stay comparable across paths.
         total = max(fused.num_descriptors, 1)

@@ -13,7 +13,6 @@ goes through the runtime — the engine never calls ``execute_*`` directly
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -24,6 +23,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import DecodeState, decode_step
 from repro.models.transformer import init_decode_caches
+from repro.obs.metrics import Histogram
+from repro.obs.trace import Tracer, monotonic
 from repro.runtime import ChannelConfig, DMARuntime
 from repro.runtime.instrumentation import PerfProbe
 
@@ -79,6 +80,12 @@ class ServeEngine:
         self._ticket_uid: Dict[int, int] = {}     # ring ticket -> uid
         self._delivered: Dict[int, Request] = {}  # completion-event'd uids
         self._completed_at: Dict[int, int] = {}   # uid -> step of writeback
+        self._submitted_at: Dict[int, int] = {}   # uid -> step of submit
+        # End-to-end request latency (submit -> §II-D writeback) in decode
+        # steps: deterministic under a fixed seed, so its p50/p99 are gated
+        # per serve cell (schema v5). Small-integer domain -> the width-1
+        # linear buckets make the percentiles exact (DESIGN.md §8).
+        self.request_latency = Histogram()
         caches = init_decode_caches(cfg, capacity, max_len)
         self.state = DecodeState(
             caches, jnp.zeros((capacity,), jnp.int32))
@@ -86,6 +93,8 @@ class ServeEngine:
             lambda p, t, s: decode_step(p, t, s, cfg))
         self.steps = 0
         self.probe: Optional[PerfProbe] = None
+        self.tracer: Optional[Tracer] = None
+        self.track = "serve"
         self.step_seconds = 0.0
         self.active_slot_steps = 0
         self.admission_stalls = 0          # steps with queued work, no slot
@@ -97,6 +106,18 @@ class ServeEngine:
         """Attach a perf counter sink to this engine AND its runtime."""
         self.probe = probe
         self.runtime.attach_probe(probe)
+
+    def attach_tracer(self, tracer: Optional[Tracer], *,
+                      track: str = "serve", track_prefix: str = "") -> None:
+        """Attach a lifecycle tracer to this engine AND its runtime.
+
+        Request lifecycles render as async spans on ``track``; the
+        runtime's channel/completion/translation tracks get
+        ``track_prefix`` (the sharded frontend passes ``shard{i}/``).
+        """
+        self.tracer = tracer
+        self.track = track
+        self.runtime.attach_tracer(tracer, track_prefix=track_prefix)
 
     def perf_counters(self) -> Dict[str, float]:
         """Engine-side counters the perf sweep reads directly."""
@@ -114,6 +135,12 @@ class ServeEngine:
             "completion_poll_latency_steps":
                 (self.poll_latency_steps_sum / self.poll_latency_n
                  if self.poll_latency_n else 0.0),
+            # Tail latency (ROADMAP: continuous batching under open-loop
+            # traffic needs p50/p99, not means). Steps are scheduling
+            # outcomes — deterministic under a fixed seed — so these gate.
+            "request_latency_steps_p50": self.request_latency.percentile(50),
+            "request_latency_steps_p99": self.request_latency.percentile(99),
+            "request_latency_steps": self.request_latency.snapshot(),
             # Live §II-C speculation depth of the runtime under this engine
             # (mean over channels; a single-policy runtime reports that
             # policy's current decision).
@@ -130,7 +157,16 @@ class ServeEngine:
             payload=req.uid, channel=self._completion_channel)
         self._tickets[req.uid] = res.tickets[-1]
         self._ticket_uid[res.tickets[-1]] = req.uid
+        self._submitted_at[req.uid] = self.steps
         self.queue.append(req)
+        tr = self.tracer
+        if tr is not None and tr.sampled(req.uid):
+            # One async span per request lifetime, correlated by uid; the
+            # matching "e" fires at the §II-D writeback in step().
+            tr.async_begin("request", self.track, id=req.uid,
+                           ticket=res.tickets[-1], uid=req.uid)
+            tr.instant("request.submit", self.track, uid=req.uid,
+                       ticket=res.tickets[-1])
 
     def poll_completed(self) -> List[Request]:
         """Scheduler-side completion polling via descriptor writeback flags.
@@ -158,6 +194,10 @@ class ServeEngine:
                     if self.probe is not None:
                         self.probe.on_serve_completion(
                             latency_steps=latency)
+                    tr = self.tracer
+                    if tr is not None and tr.sampled(uid):
+                        tr.instant("delivered", self.track, uid=uid,
+                                   poll_latency_steps=latency)
                 self._delivered[uid] = self.completed[uid]
         return list(self._delivered.values())
 
@@ -219,7 +259,7 @@ class ServeEngine:
                 self.probe.on_admission_stall()
 
     def step(self) -> None:
-        t0 = time.perf_counter()
+        t0 = monotonic()
         self._admit()
         active = np.array([s.busy for s in self.slots])
         if not active.any():
@@ -266,11 +306,25 @@ class ServeEngine:
                 # §II-D completion writeback: first 8 bytes -> all ones,
                 # applied to the request's ring slot through the runtime.
                 self.runtime.complete(self._tickets[r.uid])
+                latency = self.steps + 1 - self._submitted_at.get(r.uid, 0)
+                self.request_latency.record(latency)
+                if self.probe is not None:
+                    self.probe.on_request_latency(latency)
+                tr = self.tracer
+                if tr is not None and tr.sampled(r.uid):
+                    tr.instant("writeback", self.track, uid=r.uid,
+                               ticket=self._tickets[r.uid])
+                    tr.async_end("request", self.track, id=r.uid,
+                                 latency_steps=latency)
                 slot.request = None
         self.steps += 1
-        dt = time.perf_counter() - t0
+        dt = monotonic() - t0
         n_active = int(active.sum())
         self.step_seconds += dt
         self.active_slot_steps += n_active
         if self.probe is not None:
             self.probe.on_serve_step(n_active, dt)
+        tr = self.tracer
+        if tr is not None and tr.sampled(self.steps - 1):
+            tr.complete("serve.step", self.track, t0 * 1e6, dt * 1e6,
+                        step=self.steps - 1, active_slots=n_active)

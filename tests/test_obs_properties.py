@@ -1,0 +1,81 @@
+"""Hypothesis property tests on the histogram merge algebra (DESIGN.md §8).
+
+Cross-shard aggregation folds per-shard histograms in whatever order the
+mesh iterates — merge must be associative and commutative, and merging
+must agree with having recorded the concatenated samples directly.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+pytestmark = pytest.mark.slow  # property suites: run in CI's slow job
+from hypothesis import given, settings, strategies as st
+
+from repro.obs.metrics import Histogram
+
+values = st.one_of(
+    st.integers(min_value=0, max_value=63),            # exact linear region
+    st.integers(min_value=64, max_value=1 << 24),      # log2 region
+    st.floats(min_value=0.0, max_value=1e9,
+              allow_nan=False, allow_infinity=False),
+)
+sample_lists = st.lists(values, max_size=40)
+
+
+def _h(vals):
+    h = Histogram()
+    for v in vals:
+        h.record(v)
+    return h
+
+
+def _key(h):
+    return (h.counts, h.n, h.min, h.max,
+            [h.percentile(q) for q in (50, 95, 99)])
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=sample_lists, b=sample_lists, c=sample_lists)
+def test_merge_is_associative_and_commutative(a, b, c):
+    ab_c = _h(a)
+    ab_c.merge(_h(b))
+    ab_c.merge(_h(c))                    # (a + b) + c
+    bc = _h(b)
+    bc.merge(_h(c))
+    a_bc = _h(a)
+    a_bc.merge(bc)                       # a + (b + c)
+    ba = _h(b)
+    ba.merge(_h(a))                      # b + a
+    ab = _h(a)
+    ab.merge(_h(b))                      # a + b
+    assert _key(ab_c) == _key(a_bc)
+    assert _key(ab) == _key(ba)
+    # float totals associate only approximately; counts associate exactly
+    assert ab_c.total == pytest.approx(a_bc.total, rel=1e-12, abs=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=sample_lists, b=sample_lists)
+def test_merge_equals_recording_concatenated_samples(a, b):
+    merged = _h(a)
+    merged.merge(_h(b))
+    direct = _h(a + b)
+    assert _key(merged) == _key(direct)
+
+
+@settings(max_examples=60, deadline=None)
+@given(samples=st.lists(st.integers(min_value=0, max_value=63),
+                        min_size=1, max_size=60),
+       q=st.sampled_from([1, 10, 25, 50, 75, 90, 95, 99, 100]))
+def test_exact_region_percentiles_match_numpy_oracle(samples, q):
+    h = _h(samples)
+    assert h.percentile(q) == float(
+        np.percentile(np.asarray(samples), q, method="inverted_cdf"))
+
+
+@settings(max_examples=60, deadline=None)
+@given(samples=sample_lists)
+def test_snapshot_roundtrip_preserves_distribution(samples):
+    h = _h(samples)
+    back = Histogram.from_snapshot(h.snapshot())
+    assert _key(back) == _key(h)

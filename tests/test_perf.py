@@ -99,7 +99,7 @@ def test_sweep_document_is_bit_for_bit_deterministic():
 
 def test_sweep_document_schema_and_counters():
     doc = run_sweep(_mini_spec())
-    assert doc["schema_version"] == 4
+    assert doc["schema_version"] == 5
     assert doc["translation_cache_enabled"] is True
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -172,7 +172,7 @@ def test_committed_baseline_upholds_adaptive_claim():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_perf.json"
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == 4
+    assert doc["schema_version"] == 5
     checked = 0
     for key, cell in doc["cells"].items():
         if cell.get("kind") != "dma":
@@ -200,10 +200,19 @@ def test_serve_cell_is_deterministic_and_schedules_only():
     assert (m1, c1) == (m2, c2)
     assert set(m1) == {"admission_stall_rate",
                        "completion_poll_latency_steps",
-                       "serve_steps_per_request"}
+                       "serve_steps_per_request",
+                       "request_latency_steps_p50",
+                       "request_latency_steps_p99",
+                       "request_latency_steps"}
     # capacity < n_requests must actually exercise admission pressure
     assert m1["admission_stall_rate"] > 0.0
     assert m1["serve_steps_per_request"] > 0.0
+    # tail latency (schema v5): histogram snapshot covers every request and
+    # the percentile scalars are consistent with it
+    hist = m1["request_latency_steps"]
+    assert hist["n"] == DEFAULT_SERVE_SPEC.n_requests
+    assert 0 < m1["request_latency_steps_p50"] \
+        <= m1["request_latency_steps_p99"] <= hist["max"]
     assert c1["serve"]["completions_observed"] == DEFAULT_SERVE_SPEC.n_requests
     assert "step_seconds" not in c1["serve"]   # wall-clock never stored
 

@@ -8,6 +8,7 @@ import json
 import pytest
 
 from repro.configs.registry import list_archs
+from repro.obs.metrics import Histogram
 from repro.perf import gate
 from repro.perf.sweep import (
     SCHEMA_VERSION,
@@ -61,7 +62,12 @@ def _cell(util=0.66, launch=36.0, merge=2.0, hit=0.95,
 SERVE_CELL = "serve/archA/cap2"
 
 
-def _serve_cell(stall=0.5, poll=1.0, steps=4.0):
+def _serve_cell(stall=0.5, poll=1.0, steps=4.0,
+                lat=(10, 12, 13, 14, 18, 21)):
+    h = Histogram()
+    for v in lat:
+        h.record(v)
+    snap = h.snapshot()
     return {
         "kind": "serve",
         "arch": "archA", "workload": "serve",
@@ -70,6 +76,9 @@ def _serve_cell(stall=0.5, poll=1.0, steps=4.0):
             "admission_stall_rate": stall,
             "completion_poll_latency_steps": poll,
             "serve_steps_per_request": steps,
+            "request_latency_steps_p50": snap["p50"],
+            "request_latency_steps_p99": snap["p99"],
+            "request_latency_steps": snap,
         },
         "counters": {},
     }
@@ -160,6 +169,85 @@ def test_serve_cell_does_not_require_dma_metrics():
     """A serve cell carries no bus_utilization — must not error."""
     base = _doc(cells={SERVE_CELL: _serve_cell()})
     assert gate.compare(base, copy.deepcopy(base)) == []
+
+
+# ---------------------------------------------------------------------------
+# Histogram-valued metrics (schema v5, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def test_serve_histogram_tail_regression_trips_gate_per_percentile():
+    """A pure tail shift (one request 21 -> 60 steps) must fail at the
+    gated tail percentiles and the p99 scalar, while p50 stays green."""
+    base = _doc(cells={SERVE_CELL: _serve_cell()})
+    worse = _doc(cells={SERVE_CELL: _serve_cell(
+        lat=(10, 12, 13, 14, 18, 60))})
+    regs = gate.compare(base, worse)
+    assert sorted(r.metric for r in regs) == [
+        "request_latency_steps.p95",
+        "request_latency_steps.p99",
+        "request_latency_steps_p99"]
+    for r in regs:
+        assert r.current == 60.0 and r.baseline == 21.0
+
+
+def test_serve_histogram_improvement_never_fails():
+    base = _doc(cells={SERVE_CELL: _serve_cell()})
+    better = _doc(cells={SERVE_CELL: _serve_cell(lat=(2, 2, 3, 3, 4, 5))})
+    assert gate.compare(base, better) == []
+
+
+def test_serve_histogram_one_step_jitter_absorbed_by_floor():
+    """p50 moving 2 -> 3 is +50% relative but only one decode step: the
+    histogram branch's absolute floor must not fire (the strict p50/p99
+    scalars still gate bit-for-bit, by design)."""
+    base = _doc(cells={SERVE_CELL: _serve_cell(lat=(2,) * 6)})
+    cur = _doc(cells={SERVE_CELL: _serve_cell(lat=(3,) * 6)})
+    regs = gate.compare(base, cur)
+    assert all("." not in r.metric for r in regs)
+    assert sorted(r.metric for r in regs) == [
+        "request_latency_steps_p50", "request_latency_steps_p99"]
+
+
+def test_serve_histogram_non_dict_errors():
+    base = _doc(cells={SERVE_CELL: _serve_cell()})
+    cur = _doc(cells={SERVE_CELL: _serve_cell()})
+    cur["cells"][SERVE_CELL]["metrics"]["request_latency_steps"] = 13.0
+    with pytest.raises(gate.GateError, match="histogram snapshot"):
+        gate.compare(base, cur)
+
+
+def test_serve_histogram_missing_percentile_errors():
+    base = _doc(cells={SERVE_CELL: _serve_cell()})
+    cur = _doc(cells={SERVE_CELL: _serve_cell()})
+    del cur["cells"][SERVE_CELL]["metrics"]["request_latency_steps"]["p95"]
+    with pytest.raises(gate.GateError, match="p95"):
+        gate.compare(base, cur)
+
+
+def test_cli_tolerance_accepts_histogram_percentile_key(tmp_path):
+    base = _write(tmp_path, "base.json",
+                  _doc(cells={SERVE_CELL: _serve_cell()}))
+    bad = _doc(cells={SERVE_CELL: _serve_cell(
+        lat=(10, 12, 13, 14, 18, 60))})
+    badp = _write(tmp_path, "bad.json", bad)
+    assert gate.main(["--baseline", base, "--current", badp]) == 1
+    assert gate.main(["--baseline", base, "--current", badp,
+                      "--tolerance", "request_latency_steps.p95=5.0",
+                      "--tolerance", "request_latency_steps.p99=5.0",
+                      "--tolerance", "request_latency_steps_p99=5.0"]) == 0
+    assert gate.main(["--baseline", base, "--current", badp,
+                      "--tolerance",
+                      "request_latency_steps.p42=0.1"]) == 2
+
+
+def test_serve_latency_summary_prints_percentile_table():
+    doc = _doc(cells={SERVE_CELL: _serve_cell()})
+    text = gate.serve_latency_summary(doc)
+    lines = text.splitlines()
+    assert "p50" in lines[1] and "p99" in lines[1]
+    assert SERVE_CELL in lines[2]
+    assert "13.0" in lines[2] and "21.0" in lines[2]
+    assert "no serve-cell histograms" in gate.serve_latency_summary(_doc())
 
 
 def test_quick_subset_always_keeps_serve_cells():
