@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core.chain import from_segments
 from repro.core.simulator import simulate_multichannel
-from repro.runtime import coalesce, default_runtime
+from repro.runtime import SubmitRequest, coalesce, default_runtime
 
 
 def _bench_launch(n_desc: int = 256, repeats: int = 5, seed: int = 0) -> dict:
@@ -34,7 +34,7 @@ def _bench_launch(n_desc: int = 256, repeats: int = 5, seed: int = 0) -> dict:
         dsts = rng.integers(0, pool - 64, n_desc)
         d = from_segments(srcs, dsts, lens)
         t0 = time.perf_counter()
-        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
         per_desc_us.append((time.perf_counter() - t0) / n_desc * 1e6)
         rt.drain_until_idle()
     stats = rt.stats()
@@ -79,7 +79,7 @@ def _bench_translation(n_desc: int = 256, warm_rounds: int = 5,
 
     def dispatch_us() -> float:
         t0 = time.perf_counter()
-        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
         rt.drain_until_idle()
         return (time.perf_counter() - t0) / n_desc * 1e6
 
@@ -89,7 +89,7 @@ def _bench_translation(n_desc: int = 256, warm_rounds: int = 5,
         "descriptors_per_submit": n_desc,
         "warm_rounds": warm_rounds,
         "translation_enabled": translation,
-        "counters": rt.translation_stats(),
+        "counters": rt._translation_stats_raw(),
         "wall_clock": {
             "cold_dispatch_us_per_descriptor": float(cold),
             "warm_dispatch_us_mean": float(np.mean(warm)),
@@ -130,7 +130,7 @@ def _bench_tracing(n_desc: int = 256, rounds: int = 5, seed: int = 0) -> dict:
 
     def dispatch_us(rt) -> float:
         t0 = time.perf_counter()
-        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
         rt.drain_until_idle()
         return (time.perf_counter() - t0) / n_desc * 1e6
 

@@ -1,0 +1,138 @@
+"""In-flight transform A/B benchmark (``benchmarks/run.py --transforms``).
+
+Runs the quantized-vs-identity datapath end to end, both legs for real:
+
+* **Runtime leg** — the same seeded irregular chains are submitted twice
+  through one :class:`repro.runtime.DMARuntime` (identity, then
+  ``kv_int8``); the int8 leg must round-trip within the EF-int8 fidelity
+  tolerance against the fp32 destination and every transform plan must be
+  served by a transform-fused compiled executor.
+* **Cycle-model leg** — the cached-artifact frontend at the same logical
+  payload, charging full beats vs EF-int8-compressed beats; effective
+  bandwidth (logical bytes per bus cycle) must strictly improve.
+
+``check()`` returns the failure messages the CI perf-gate job turns into
+a nonzero exit: the A/B is a hard claim (int8 beats fp32 at equal
+fidelity tolerance), not a trend line.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chain import from_segments
+from repro.core.simulator import SimConfig, simulate
+from repro.core.transform import kv8_roundtrip_np
+from repro.optim.compress import BLOCK, compression_ratio
+from repro.runtime import ChannelConfig, DMARuntime, SubmitRequest
+
+#: Worst-case |dequant(quant(x)) - x| / max|x| of the per-block symmetric
+#: EF-int8 scheme: half a quantization step at scale = max/127.
+FIDELITY_TOL = 1.0 / 127.0
+
+
+def _runtime_ab(seed: int, *, n_chains: int = 8, n_segments: int = 6,
+                unit: int = 64) -> Dict[str, float]:
+    rng = np.random.default_rng([seed, 0xAB])
+    pool = 256 * unit
+    rt = DMARuntime([ChannelConfig(name="ch0", tier="serial",
+                                   ring_capacity=256, max_len=512)])
+    src = rng.standard_normal(pool).astype(np.float32)
+    rt.register_pool("src", jnp.asarray(src))
+    n_slots = pool // unit
+    results = {}
+    for transform in (None, "kv_int8"):
+        rt.register_pool("dst", jnp.zeros(pool, jnp.float32))
+        chain_rng = np.random.default_rng([seed, 0xC4])
+        for _ in range(n_chains):
+            s = chain_rng.choice(n_slots, n_segments, replace=False)
+            t = chain_rng.choice(n_slots, n_segments, replace=False)
+            d = from_segments(s * unit, t * unit,
+                              np.full(n_segments, unit, np.int64))
+            rt.submit(SubmitRequest(chain=d, src_pool="src",
+                                    dst_pool="dst", tier="serial",
+                                    transform=transform))
+        rt.drain_until_idle()
+        results[transform or "identity"] = np.asarray(rt.pool("dst"))
+    fp32, int8 = results["identity"], results["kv_int8"]
+    moved = fp32 != 0
+    err = float(np.max(np.abs(int8 - fp32))
+                / max(float(np.max(np.abs(fp32))), 1e-12))
+    # Oracle check: kv_int8 is pool-absolute, so every moved destination
+    # element must sit on the numpy oracle's EF-int8 grid — same per-256
+    # block, same scale, code off by at most one (device-vs-numpy scale
+    # arithmetic differs at ULP level, which can flip codes right at
+    # rounding boundaries). The value lookup maps each destination back
+    # to its source element; continuous random floats make it unambiguous.
+    oracle = kv8_roundtrip_np(src)
+    order = np.argsort(src)
+    src_idx = order[np.searchsorted(src[order], fp32[moved])]
+    step = (np.abs(src).reshape(-1, BLOCK).max(axis=1) / 127.0)[src_idx // BLOCK]
+    oracle_code_err = float(np.max(
+        np.abs(int8[moved] - oracle[src_idx]) / np.maximum(step, 1e-12),
+        initial=0.0))
+    st = rt._translation_stats_raw()
+    return {
+        "fidelity_max_rel_err": err,
+        "oracle_elems_checked": int(moved.sum()),
+        "oracle_code_err": oracle_code_err,
+        "transform_fusion_hit_rate":
+            float(st["transform_fusion_hit_rate"]),
+        "transform_lookups": int(st["transform_lookups"]),
+    }
+
+
+def _cycle_ab(mem_latency: int = 13, nbytes: int = 1024,
+              num_transfers: int = 512) -> Dict[str, float]:
+    ratio = compression_ratio()
+    fp32 = simulate(SimConfig.translated_frontend(), mem_latency, nbytes,
+                    num_transfers=num_transfers)
+    int8 = simulate(SimConfig.translated_frontend(), mem_latency, nbytes,
+                    num_transfers=num_transfers, payload_ratio=ratio)
+    bw_fp32 = num_transfers * nbytes / max(fp32.cycles, 1)
+    bw_int8 = num_transfers * nbytes / max(int8.cycles, 1)
+    return {
+        "payload_ratio": float(ratio),
+        "effective_bandwidth_fp32": float(bw_fp32),
+        "effective_bandwidth_int8": float(bw_int8),
+        "effective_bandwidth_gain": float(bw_int8 / max(bw_fp32, 1e-12)),
+    }
+
+
+def run(csv_rows: list, seed: int = 0) -> Dict[str, object]:
+    runtime = _runtime_ab(seed)
+    cycle = _cycle_ab()
+    csv_rows.append(("transforms_kv_int8", 0.0,
+                     f"gain={cycle['effective_bandwidth_gain']:.2f}x/"
+                     f"fidelity={runtime['fidelity_max_rel_err']:.5f}/"
+                     f"fusion={runtime['transform_fusion_hit_rate']:.2f}"))
+    return {"runtime_ab": runtime, "cycle_ab": cycle}
+
+
+def check(metrics: Dict[str, object]) -> List[str]:
+    """Hard A/B assertions; each returned message is a CI failure."""
+    failures = []
+    gain = metrics["cycle_ab"]["effective_bandwidth_gain"]
+    if gain <= 1.0:
+        failures.append(
+            f"int8 effective bandwidth does not beat fp32 (gain={gain:.3f})")
+    err = metrics["runtime_ab"]["fidelity_max_rel_err"]
+    if err > FIDELITY_TOL:
+        failures.append(
+            f"kv_int8 roundtrip error {err:.5f} exceeds the EF-int8 "
+            f"fidelity tolerance {FIDELITY_TOL:.5f}")
+    if err == 0.0:
+        failures.append(
+            "kv_int8 leg is bit-identical to fp32 — transform was skipped")
+    fusion = metrics["runtime_ab"]["transform_fusion_hit_rate"]
+    if fusion < 1.0:
+        failures.append(
+            f"transform plans not fully fused (hit rate {fusion:.2f})")
+    code_err = metrics["runtime_ab"]["oracle_code_err"]
+    if code_err > 1.0 + 1e-6:
+        failures.append(
+            f"kv_int8 datapath left the numpy EF-int8 oracle's grid "
+            f"(max code error {code_err:.3f} steps)")
+    return failures

@@ -59,6 +59,7 @@ from benchmarks import (  # noqa: E402
     bench_engine,
     bench_runtime,
     bench_sharded,
+    bench_transforms,
     fig4_utilization,
     fig5_hitrate,
     roofline,
@@ -91,6 +92,13 @@ def main(argv=None) -> int:
                          "trace (Perfetto/chrome://tracing JSON, DESIGN.md "
                          "§8); includes sharded migration-hop flow arrows "
                          "when --mesh >= 2")
+    ap.add_argument("--transforms", action="store_true",
+                    help="run only the in-flight transform A/B "
+                         "(int8-quantized vs fp32 datapath, real both "
+                         "legs) and exit nonzero unless int8 beats fp32 "
+                         "on effective bandwidth at equal fidelity "
+                         "tolerance with every transform plan fused; "
+                         "this is the CI perf-gate job's transform lane")
     ap.add_argument("--no-translation-cache", action="store_true",
                     help="escape hatch: run the legacy uncached dispatch "
                          "path everywhere (runtime benches and the perf "
@@ -100,6 +108,21 @@ def main(argv=None) -> int:
                     help="where to write BENCH_*.json")
     args = ap.parse_args(argv)
     translation = not args.no_translation_cache
+
+    if args.transforms:
+        csv_rows: list = []
+        metrics = bench_transforms.run(csv_rows, seed=args.seed)
+        print("name,us_per_call,derived")
+        for name, us, derived in csv_rows:
+            print(f"{name},{us:.2f},{derived}")
+        print(json.dumps(metrics, indent=2, sort_keys=True))
+        failures = bench_transforms.check(metrics)
+        for msg in failures:
+            print(f"TRANSFORM A/B FAIL: {msg}", file=sys.stderr)
+        if not failures:
+            print("transform A/B: int8 beats fp32 at equal fidelity "
+                  "tolerance; all transform plans fused")
+        return 1 if failures else 0
 
     if args.mesh:
         import jax

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
+from repro.runtime import SubmitRequest
 from repro.serve import PagedKVCache, Request, ServeEngine
 
 
@@ -30,7 +31,8 @@ def main():
     t0 = time.perf_counter()
     for uid in range(args.requests):
         prompt = list(rng.integers(1, cfg.vocab_size, rng.integers(4, 12)))
-        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=8))
+        engine.submit(SubmitRequest(request=Request(
+            uid=uid, prompt=prompt, max_new_tokens=8)))
     done = engine.run(max_steps=2000)
     dt = time.perf_counter() - t0
 

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core.chain import from_segments
 from repro.obs import Tracer, write_chrome_trace, write_metrics_jsonl
-from repro.runtime import default_runtime
+from repro.runtime import SubmitRequest, default_runtime
 from repro.runtime.instrumentation import PerfProbe
 
 POOL, N_DESC, SEED = 1 << 14, 96, 0
@@ -40,11 +40,14 @@ rng = np.random.default_rng(SEED)
 chain = from_segments(rng.integers(0, POOL - 64, N_DESC),
                       rng.integers(0, POOL - 64, N_DESC),
                       rng.integers(1, 64, N_DESC))
-# on_complete registers an IRQ-style event on the chain's last ticket, so
-# the poll below delivers a record (and the trace gains retire/delivered).
+# One SubmitRequest carries the whole contract: chain + pools + optional
+# in-flight transform (e.g. transform="kv_int8") + priority + completion
+# callback. on_complete registers an IRQ-style event on the chain's last
+# ticket, so the poll below delivers a record (and the trace gains
+# retire/delivered).
 done = []
-res = rt.submit(chain, src_pool="src", dst_pool="dst",
-                on_complete=done.append)
+res = rt.submit(SubmitRequest(chain=chain, src_pool="src", dst_pool="dst",
+                              on_complete=done.append))
 rt.drain_until_idle()
 events = rt.completion.poll()
 print(f"drained {len(res.tickets)} tickets on channel {res.channel} "

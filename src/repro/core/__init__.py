@@ -38,6 +38,15 @@ from .simulator import (  # noqa: F401
     table_iv,
     utilization_sweep,
 )
+from .transform import (  # noqa: F401
+    IDENTITY,
+    TransformSpec,
+    as_transform,
+    kv8_roundtrip,
+    kv8_roundtrip_np,
+    reference_apply,
+    transform_source_view,
+)
 from .area_model import area_kge, headline_fpga_savings, report  # noqa: F401
 from .prefetch import analytical_utilization, estimate_hit_rate  # noqa: F401
 from .speculation import (  # noqa: F401

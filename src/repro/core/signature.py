@@ -166,6 +166,8 @@ class ChainSignature:
     overlap: bool             # dst intervals overlap -> ordered execution
     aligned: bool             # rel offsets are multiples of `unit`
     depth_class: int          # pow2 bucket of the §II-C speculation depth
+    transform: str = ""       # in-flight transform token ("" = identity,
+                              # DESIGN.md §9) — fused into the executor
 
 
 def _layout_of(rel_src: np.ndarray, rel_dst: np.ndarray,
@@ -191,7 +193,7 @@ def _has_overlap(rel_dst: np.ndarray, ln: np.ndarray) -> bool:
 
 
 def signature_of(canon: CanonicalChain, *, tier: str,
-                 depth: int = 0) -> ChainSignature:
+                 depth: int = 0, transform: str = "") -> ChainSignature:
     """Bucketed cache key of a canonical chain (active segments only)."""
     act = canon.length > 0
     rs, rd, ln = canon.rel_src[act], canon.rel_dst[act], canon.length[act]
@@ -200,7 +202,8 @@ def signature_of(canon: CanonicalChain, *, tier: str,
         return ChainSignature(tier=tier, n_class=1, unit_class=1,
                               layout=LAYOUT_SEQUENTIAL, unit=0,
                               overlap=False, aligned=False,
-                              depth_class=pow2_bucket(depth) if depth else 0)
+                              depth_class=pow2_bucket(depth) if depth else 0,
+                              transform=transform)
     unit = int(ln[0]) if int(ln.min()) == int(ln.max()) else 0
     aligned = bool(unit > 0
                    and not np.any(rs % unit)
@@ -214,4 +217,5 @@ def signature_of(canon: CanonicalChain, *, tier: str,
         overlap=_has_overlap(rd, ln),
         aligned=aligned,
         depth_class=pow2_bucket(depth) if depth else 0,
+        transform=transform,
     )

@@ -44,6 +44,8 @@ within ~15 % (EXPERIMENTS.md reports measured vs published side by side).
 from __future__ import annotations
 
 import dataclasses
+import numbers
+import warnings
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -93,13 +95,26 @@ class SimConfig:
 
     name: str
     in_flight: int = 4
-    prefetch: PolicyLike = 0   # speculation policy; int n == FixedDepth(n)
+    prefetch: PolicyLike = FixedDepth(0)  # speculation policy (depth API)
     logicore: bool = False     # behavioural LogiCORE IP DMA model
     translated: bool = False   # chain pre-lowered by the translation cache
 
+    def __post_init__(self):
+        # The speculation-policy layer is the single depth API: a bare int
+        # still works for one release (coerced through FixedDepth, which
+        # as_policy makes bit-for-bit identical) but warns.
+        if isinstance(self.prefetch, numbers.Integral):
+            warnings.warn(
+                "SimConfig.prefetch as a bare int is deprecated; pass a "
+                "speculation policy (repro.core.speculation.FixedDepth(n))."
+                " The int form is removed one release after 0.4.",
+                DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "prefetch",
+                               FixedDepth(int(self.prefetch)))
+
     @staticmethod
     def base() -> "SimConfig":
-        return SimConfig("base", in_flight=4, prefetch=0)
+        return SimConfig("base", in_flight=4, prefetch=FixedDepth(0))
 
     @staticmethod
     def translated_frontend() -> "SimConfig":
@@ -110,16 +125,17 @@ class SimConfig:
         the software analogue of removing §II-A's serialization entirely.
         Payloads still pay full descriptor traffic and bus contention.
         """
-        return SimConfig("translated", in_flight=4, prefetch=0,
+        return SimConfig("translated", in_flight=4, prefetch=FixedDepth(0),
                          translated=True)
 
     @staticmethod
     def speculation() -> "SimConfig":
-        return SimConfig("speculation", in_flight=4, prefetch=DEFAULT_DEPTH)
+        return SimConfig("speculation", in_flight=4,
+                         prefetch=FixedDepth(DEFAULT_DEPTH))
 
     @staticmethod
     def scaled() -> "SimConfig":
-        return SimConfig("scaled", in_flight=24, prefetch=24)
+        return SimConfig("scaled", in_flight=24, prefetch=FixedDepth(24))
 
     @staticmethod
     def adaptive(policy: Optional[AdaptiveDepth] = None) -> "SimConfig":
@@ -134,7 +150,8 @@ class SimConfig:
 
     @staticmethod
     def logicore_ip() -> "SimConfig":
-        return SimConfig("LogiCORE", in_flight=4, prefetch=0, logicore=True)
+        return SimConfig("LogiCORE", in_flight=4, prefetch=FixedDepth(0),
+                         logicore=True)
 
 
 # Memory-system configurations of §III-A.
@@ -186,10 +203,11 @@ def _simulate_ours(
     num_transfers: int,
     hit_rate: float,
     seed: int,
+    payload_ratio: float = 1.0,
 ) -> SimResult:
     rng = np.random.default_rng(seed)
     bus = _Bus(mem_latency)
-    payload_beats_each = max(1, transfer_bytes // BUS_BYTES)
+    payload_beats_each = max(1, int(transfer_bytes * payload_ratio) // BUS_BYTES)
     spec = as_policy(cfg.prefetch).make_controller()
     cur_depth = spec.depth
     spec_on = spec.enabled
@@ -312,6 +330,7 @@ def _simulate_ours(
 
 def _simulate_translated(
     cfg: SimConfig, mem_latency: int, transfer_bytes: int, num_transfers: int,
+    payload_ratio: float = 1.0,
 ) -> SimResult:
     """Launch model for a cached lowered chain.
 
@@ -328,7 +347,7 @@ def _simulate_translated(
     import heapq
 
     bus = _Bus(mem_latency)
-    payload_beats_each = max(1, transfer_bytes // BUS_BYTES)
+    payload_beats_each = max(1, int(transfer_bytes * payload_ratio) // BUS_BYTES)
     desc_end = np.zeros(num_transfers)
     payload_end = np.zeros(num_transfers)
     rf_rb_first = None
@@ -367,11 +386,11 @@ def _simulate_translated(
 
 def _simulate_logicore(
     cfg: SimConfig, mem_latency: int, transfer_bytes: int, num_transfers: int,
-    seed: int,
+    seed: int, payload_ratio: float = 1.0,
 ) -> SimResult:
     """Serialized descriptor engine; see module docstring for calibration."""
     bus = _Bus(mem_latency)
-    payload_beats_each = max(1, transfer_bytes // BUS_BYTES)
+    payload_beats_each = max(1, int(transfer_bytes * payload_ratio) // BUS_BYTES)
     rf_rb = 2 * mem_latency + PIPE + LC_DESC_BEATS + LC_PROC
     payload_ends = np.zeros(num_transfers)
     desc_beats_total = 0
@@ -409,18 +428,28 @@ def simulate(
     num_transfers: int = 2000,
     hit_rate: float = 1.0,
     seed: int = 0,
+    payload_ratio: float = 1.0,
 ) -> SimResult:
-    """Steady-state bus utilization of one (config, memory, size) point."""
+    """Steady-state bus utilization of one (config, memory, size) point.
+
+    ``payload_ratio`` models an in-flight transform in the datapath: the
+    frontend still walks ``transfer_bytes`` of logical payload per
+    descriptor, but only ``transfer_bytes * payload_ratio`` bytes cross
+    the return bus (e.g. ~0.254 for EF-int8 KV quantization). Descriptor
+    traffic is unchanged — transforms act on payload beats only.
+    """
     if transfer_bytes % BUS_BYTES:
         raise ValueError("paper evaluates bus-aligned transfer sizes")
+    if not 0.0 < payload_ratio <= 1.0:
+        raise ValueError("payload_ratio must be in (0, 1]")
     if cfg.logicore:
         return _simulate_logicore(cfg, mem_latency, transfer_bytes,
-                                  num_transfers, seed)
+                                  num_transfers, seed, payload_ratio)
     if cfg.translated:
         return _simulate_translated(cfg, mem_latency, transfer_bytes,
-                                    num_transfers)
+                                    num_transfers, payload_ratio)
     return _simulate_ours(cfg, mem_latency, transfer_bytes, num_transfers,
-                          hit_rate, seed)
+                          hit_rate, seed, payload_ratio)
 
 
 def utilization_sweep(

@@ -44,9 +44,11 @@ import numpy as np
 
 from repro.core.chain import from_segments
 from repro.core.prefetch import estimate_hit_rate
+from repro.obs.counters import PerfCounters, namespaced
 from repro.obs.metrics import Histogram
 from repro.obs.trace import Tracer, monotonic
 from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
+from repro.runtime.submit import SubmitRequest, Ticket, warn_legacy_submit
 
 from . import shardlib
 
@@ -361,7 +363,8 @@ class ShardedDMARuntime:
         rt = self.shards[shard]
         for name in pool_names:
             d = self._chain(rows_s, rows_d, self._row_elems[name])
-            res = rt.submit(d, src_pool=name, dst_pool=name, tier="serial")
+            res = rt.submit(SubmitRequest(
+                chain=d, src_pool=name, dst_pool=name, tier="serial"))
             if res.coalesce is not None:
                 stats.chain_in += res.coalesce.n_in
                 stats.chain_out += res.coalesce.n_out
@@ -395,8 +398,9 @@ class ShardedDMARuntime:
                 self._place(src_shard, self._pad(jnp.zeros(
                     n * row_elems, src_rt.pool(name).dtype))))
             d_out = self._chain(rows_s, stage_rows, row_elems)
-            res = src_rt.submit(d_out, src_pool=name,
-                                dst_pool=self.STAGE_POOL, tier="serial")
+            res = src_rt.submit(SubmitRequest(
+                chain=d_out, src_pool=name, dst_pool=self.STAGE_POOL,
+                tier="serial"))
             if res.coalesce is not None:
                 stats.chain_in += res.coalesce.n_in
                 stats.chain_out += res.coalesce.n_out
@@ -421,8 +425,9 @@ class ShardedDMARuntime:
                     tr.flow_step("hop", "fabric", fid, ts=t2 * 1e6 - 1e-3)
             # Ingress: scatter staging rows onto the destination pages.
             d_in = self._chain(stage_rows, rows_d, row_elems)
-            res = dst_rt.submit(d_in, src_pool=self.STAGE_POOL,
-                                dst_pool=name, tier="serial")
+            res = dst_rt.submit(SubmitRequest(
+                chain=d_in, src_pool=self.STAGE_POOL, dst_pool=name,
+                tier="serial"))
             if res.coalesce is not None:
                 stats.chain_in += res.coalesce.n_in
                 stats.chain_out += res.coalesce.n_out
@@ -457,11 +462,15 @@ class ShardedDMARuntime:
         for rt in self.shards:
             rt.drain_until_idle(max_rounds)
 
-    def translation_stats(self) -> Dict[str, object]:
-        """Mesh-wide translation-cache counters (summed over shards)."""
+    def _translation_stats_raw(self) -> Dict[str, object]:
+        """Bare-key mesh aggregate (summed over shards' raw blocks)."""
         from repro.runtime.lowering import aggregate_stats
         return aggregate_stats(
-            [rt.translation_stats() for rt in self.shards])
+            [rt._translation_stats_raw() for rt in self.shards])
+
+    def translation_stats(self) -> PerfCounters:
+        """Mesh-wide translation-cache counters (``translation.*`` keys)."""
+        return namespaced(self._translation_stats_raw(), "translation")
 
     def stats(self) -> Dict[str, object]:
         return {
@@ -630,9 +639,26 @@ class ShardedServeEngine:
             counts[self.kv.owner.owner(int(p))] += 1
         return int(np.argmax(counts))   # argmax ties -> lowest shard
 
-    def submit(self, req) -> int:
-        """Admit ``req`` to the shard owning its KV pages; returns the
-        shard. Remote pages are migrated into the owner first."""
+    def submit(self, req):
+        """Admit a request to the shard owning its KV pages.
+
+        Unified form: a :class:`~repro.runtime.SubmitRequest` whose
+        ``request`` field is the serve ``Request``; returns a
+        :class:`~repro.runtime.Ticket` with ``shard`` and ``uid`` set.
+        The legacy positional-``Request`` form still works for one
+        release but warns and keeps returning the shard index (int).
+        Remote pages are migrated into the owner first either way.
+        """
+        if isinstance(req, SubmitRequest):
+            if req.request is None:
+                raise ValueError(
+                    "ShardedServeEngine.submit needs SubmitRequest.request "
+                    "set to a serve Request")
+            return self._admit(req.request, on_complete=req.on_complete)
+        warn_legacy_submit("ShardedServeEngine.submit")
+        return self._admit(req).shard
+
+    def _admit(self, req, on_complete=None) -> Ticket:
         kv_pages = list(getattr(req, "kv_pages", None) or [])
         shard = self._route(req.uid, kv_pages)
         if kv_pages and self.kv is not None:
@@ -665,8 +691,9 @@ class ShardedServeEngine:
         self.request_pages[req.uid] = kv_pages
         self.shard_of[req.uid] = shard
         self.requests_per_shard[shard] += 1
-        self.engines[shard].submit(req)
-        return shard
+        t = self.engines[shard].submit(
+            SubmitRequest(request=req, on_complete=on_complete))
+        return dataclasses.replace(t, shard=shard)
 
     # -- stepping ------------------------------------------------------------
     def step(self) -> None:
@@ -731,24 +758,35 @@ class ShardedServeEngine:
             merged.merge(eng.request_latency)
         return merged
 
-    def perf_counters(self) -> Dict[str, object]:
+    def perf_counters(self) -> PerfCounters:
+        """Mesh counters under the unified ``sharded.*`` namespace.
+
+        Canonical keys are ``sharded.<field>`` plus a nested
+        ``translation`` block; old bare keys and ``translation_cache``
+        read through deprecated aliases (DESIGN.md §9). Per-shard blocks
+        under ``sharded.per_shard`` are ``serve.*``-namespaced.
+        """
         per = [eng.perf_counters() for eng in self.engines]
         latency = self.request_latency_histogram()
-        return {
+        raw = {
             "num_shards": self.rt.num_shards,
             "requests_per_shard": list(self.requests_per_shard),
             "remote_page_reads": self.remote_page_reads,
             "migration": dataclasses.asdict(self.migration),
-            "steps": max(p["steps"] for p in per),
-            "completed": sum(p["completed"] for p in per),
-            "admission_stalls": sum(p["admission_stalls"] for p in per),
+            "steps": max(p["serve.steps"] for p in per),
+            "completed": sum(p["serve.completed"] for p in per),
+            "admission_stalls": sum(p["serve.admission_stalls"]
+                                    for p in per),
             # Mesh-wide tail latency: per-shard histograms merged (steps
             # are scheduling outcomes, so these are seed-deterministic).
             "request_latency_steps_p50": latency.percentile(50),
             "request_latency_steps_p99": latency.percentile(99),
             "request_latency_steps": latency.snapshot(),
-            # Mesh-wide translation-cache counters: per-engine blocks are
-            # in per_shard; this is their sum (DESIGN.md §7).
-            "translation_cache": self.rt.translation_stats(),
             "per_shard": per,
         }
+        # Mesh-wide translation-cache counters: per-engine blocks are
+        # in per_shard; this is their sum (DESIGN.md §7).
+        return namespaced(
+            raw, "sharded",
+            extra={"translation": self.rt.translation_stats()},
+            extra_aliases={"translation_cache": "translation"})

@@ -8,3 +8,4 @@ from .ops import (  # noqa: F401
     paged_attention_op,
     prefetched_chain_copy_op,
 )
+from .quantize_copy import quantize_copy, quantize_copy_bucketed  # noqa: F401

@@ -1,0 +1,101 @@
+"""Descriptor-driven quantize-dequantize row copy (DMAC + in-flight kv_int8).
+
+The XDMA-style transform stage (DESIGN.md §9) fused into the Pallas
+descriptor-copy idiom: the same scalar-prefetched descriptor stream and
+double-buffered grid as :mod:`repro.kernels.descriptor_copy`, but each
+row passes through the EF-int8 per-256-block symmetric round trip of
+:mod:`repro.optim.compress` between the read and the write — the wire
+carries int8 payload + one fp32 scale per block, the destination pool
+receives dequantized values.
+
+Bit-compatibility contract: for row width a multiple of ``BLOCK`` and
+unit-aligned pools, a row's local 256-blocks coincide with the
+pool-absolute blocks of :func:`repro.core.transform.kv8_roundtrip`, so
+this kernel is value-identical to copying from the round-tripped pool
+(the lowered fallback path and the numpy oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.optim.compress import BLOCK
+
+
+def _quantize_copy_kernel(src_idx_ref, dst_idx_ref, src_ref, dst_in_ref,
+                          dst_ref):
+    """Body: round-trip one row through per-BLOCK int8 scales, then write.
+
+    Inactive descriptors (-1) write nothing; dst_in_ref is the aliased
+    destination pool (untouched rows keep their contents).
+    """
+    del dst_in_ref
+    i = pl.program_id(0)
+    active = (src_idx_ref[i] >= 0) & (dst_idx_ref[i] >= 0)
+
+    @pl.when(active)
+    def _():
+        row = src_ref[...].astype(jnp.float32)
+        blocks = row.reshape(-1, BLOCK)
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        deq = (q.astype(jnp.float32) * scale).reshape(row.shape)
+        dst_ref[...] = deq.reshape(src_ref.shape).astype(dst_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_copy(src_idx: jax.Array, dst_idx: jax.Array, src: jax.Array,
+                  dst: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """dst[dst_idx[i]] = kv8_roundtrip(src[src_idx[i]]) per descriptor i.
+
+    src/dst: (rows, unit) row pools with ``unit % BLOCK == 0`` (each row
+    is a whole number of quantization blocks).
+    """
+    n = src_idx.shape[0]
+    unit = src.shape[1]
+    if unit % BLOCK:
+        raise ValueError(f"row width {unit} is not a multiple of {BLOCK}")
+
+    dst_map = lambda i, sidx, didx: (jnp.maximum(didx[i], 0), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, unit),
+                         lambda i, sidx, didx: (jnp.maximum(sidx[i], 0), 0)),
+            pl.BlockSpec((1, unit), dst_map),
+        ],
+        out_specs=pl.BlockSpec((1, unit), dst_map),
+    )
+    return pl.pallas_call(
+        _quantize_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={3: 0},   # dst pool (after 2 scalars + src)
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32), src, dst)
+
+
+def quantize_copy_bucketed(src_idx: jax.Array, dst_idx: jax.Array,
+                           src: jax.Array, dst: jax.Array, *,
+                           n_bucket: int,
+                           interpret: bool = False) -> jax.Array:
+    """:func:`quantize_copy` padded to a fixed grid of ``n_bucket`` steps.
+
+    Same pow2-bucket contract as ``descriptor_copy_bucketed``: ``-1``
+    padding marks inactive grid steps, so every chain in a signature
+    bucket re-enters one compiled kernel.
+    """
+    n = src_idx.shape[0]
+    if n > n_bucket:
+        raise ValueError(f"{n} descriptors exceed bucket {n_bucket}")
+    if n < n_bucket:
+        pad = jnp.full((n_bucket - n,), -1, jnp.int32)
+        src_idx = jnp.concatenate([src_idx.astype(jnp.int32), pad])
+        dst_idx = jnp.concatenate([dst_idx.astype(jnp.int32), pad])
+    return quantize_copy(src_idx, dst_idx, src, dst, interpret=interpret)

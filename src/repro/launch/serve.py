@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
+from repro.runtime import SubmitRequest
 from repro.serve import Request, ServeEngine
 
 
@@ -34,10 +35,10 @@ def main():
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for uid in range(args.requests):
-        engine.submit(Request(
+        engine.submit(SubmitRequest(request=Request(
             uid=uid,
             prompt=list(rng.integers(1, cfg.vocab_size, rng.integers(4, 16))),
-            max_new_tokens=args.max_new_tokens))
+            max_new_tokens=args.max_new_tokens)))
     done = engine.run(max_steps=10000)
     dt = time.perf_counter() - t0
     tokens = sum(len(r.output) for r in done.values())

@@ -12,6 +12,7 @@ package adds
 * ``record``  — one-shot seeded serve/sharded/simulator trace recorder
   (the ``benchmarks/run.py --trace`` and CI-artifact entrypoint).
 """
+from repro.obs.counters import PerfCounters, namespaced
 from repro.obs.export import (
     chrome_trace,
     write_chrome_trace,
@@ -22,6 +23,8 @@ from repro.obs.trace import TraceEvent, Tracer, monotonic, monotonic_us
 
 __all__ = [
     "Counter",
+    "PerfCounters",
+    "namespaced",
     "Gauge",
     "Histogram",
     "MetricsRegistry",

@@ -1,0 +1,92 @@
+"""Unified perf-counter key namespace (DESIGN.md §9).
+
+The four ``perf_counters()`` surfaces — ``ServeEngine``,
+``ShardedServeEngine``, ``DMARuntime.translation_stats`` and
+``PerfProbe`` — historically returned four ad-hoc dict layouts. They now
+share one documented namespace:
+
+* ``serve.*``        — serve-engine step/latency/admission counters
+  (``serve.steps``, ``serve.completed``, ``serve.request_latency_steps_p50``,
+  …);
+* ``sharded.*``      — mesh-level counters (``sharded.num_shards``,
+  ``sharded.requests_per_shard``, ``sharded.remote_page_reads``,
+  ``sharded.migration``, ``sharded.per_shard``);
+* ``translation.*``  — chain-lowering cache counters
+  (``translation.hits``, ``translation.lookups``,
+  ``translation.transform_fusion_hit_rate``, …), plus a nested
+  ``translation`` block on the serve/sharded surfaces;
+* ``channels.*``     — per-channel probe snapshots
+  (``channels.<name>.<field>``).
+
+:class:`PerfCounters` is a plain ``dict`` whose *stored* keys are the
+canonical ones (so ``json.dumps`` and iteration see only the new
+namespace) plus an alias table: reading an old key through ``[]`` or
+``.get`` still works for one release but emits a
+:class:`DeprecationWarning`. ``in`` stays silent so feature probes don't
+spam.
+
+Internal producers (``TranslationCache.stats()``, ``aggregate_stats``)
+keep returning *raw* bare-key dicts; wrapping happens once, at each
+public surface, via :func:`namespaced`.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Dict, Mapping, Optional
+
+
+class PerfCounters(dict):
+    """Canonical-key counter dict with deprecated-alias reads."""
+
+    def __init__(self, data: Optional[Mapping[str, Any]] = None,
+                 aliases: Optional[Mapping[str, str]] = None):
+        super().__init__(data or {})
+        self._aliases: Dict[str, str] = dict(aliases or {})
+
+    def _resolve(self, key: str, warn: bool = True) -> str:
+        canonical = self._aliases.get(key)
+        if canonical is None or dict.__contains__(self, key):
+            return key
+        if warn:
+            warnings.warn(
+                f"perf counter key {key!r} is deprecated; read "
+                f"{canonical!r} (unified namespace, DESIGN.md §9). The "
+                "alias is removed one release after 0.4.",
+                DeprecationWarning, stacklevel=3)
+        return canonical
+
+    def __getitem__(self, key):
+        return dict.__getitem__(self, self._resolve(key))
+
+    def get(self, key, default=None):
+        k = self._resolve(key)
+        return dict.__getitem__(self, k) if dict.__contains__(self, k) \
+            else default
+
+    def __contains__(self, key):
+        return (dict.__contains__(self, key)
+                or self._resolve(key, warn=False) != key)
+
+    @property
+    def aliases(self) -> Dict[str, str]:
+        return dict(self._aliases)
+
+
+def namespaced(raw: Mapping[str, Any], prefix: str, *,
+               extra: Optional[Mapping[str, Any]] = None,
+               extra_aliases: Optional[Mapping[str, str]] = None
+               ) -> PerfCounters:
+    """Wrap a raw bare-key block as ``{prefix}.{key}`` canonical keys.
+
+    Every bare key becomes a deprecated alias for its dotted form;
+    ``extra`` entries are stored verbatim (already-canonical keys such
+    as a nested ``translation`` block) and ``extra_aliases`` adds
+    old-name → canonical-name mappings beyond the mechanical ones.
+    """
+    data = {f"{prefix}.{k}": v for k, v in raw.items()}
+    aliases = {k: f"{prefix}.{k}" for k in raw}
+    if extra:
+        data.update(extra)
+    if extra_aliases:
+        aliases.update(extra_aliases)
+    return PerfCounters(data, aliases=aliases)

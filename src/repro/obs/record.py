@@ -55,6 +55,7 @@ def record_serve_trace(
     from repro.configs.registry import get_config
     from repro.models import init_params
     from repro.runtime.instrumentation import PerfProbe
+    from repro.runtime import SubmitRequest
     from repro.serve import Request, ServeEngine
 
     if mesh < 1:
@@ -74,8 +75,9 @@ def record_serve_trace(
         eng.attach_probe(probe)
         eng.attach_tracer(tracer)
         for uid in range(2 * _N_REQUESTS_PER_SHARD):
-            eng.submit(Request(uid=uid, prompt=_prompt(),
-                               max_new_tokens=_MAX_NEW_TOKENS))
+            eng.submit(SubmitRequest(request=Request(
+                uid=uid, prompt=_prompt(),
+                max_new_tokens=_MAX_NEW_TOKENS)))
         while ((eng.queue or any(s.busy for s in eng.slots))
                and eng.steps < _MAX_STEPS):
             eng.step()
@@ -103,9 +105,9 @@ def record_serve_trace(
                 # Straddle shards: the majority owner wins the route and
                 # pulls the minority page across -> a real migration hop.
                 pages = pages + kv.alloc_on((home + 1) % mesh, 1)
-            eng.submit(Request(uid=uid, prompt=_prompt(),
-                               max_new_tokens=_MAX_NEW_TOKENS,
-                               kv_pages=pages))
+            eng.submit(SubmitRequest(request=Request(
+                uid=uid, prompt=_prompt(),
+                max_new_tokens=_MAX_NEW_TOKENS, kv_pages=pages)))
         eng.run(max_steps=_MAX_STEPS)
         pc = eng.perf_counters()
 
@@ -158,10 +160,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           f"{len(tracks)} tracks")
     print(f"  tracks: {', '.join(tracks)}")
     print(f"  events: {', '.join(names)}")
+    ns = "sharded" if args.mesh > 1 else "serve"
     print(f"  request latency steps: "
-          f"p50={pc['request_latency_steps_p50']:.1f} "
-          f"p99={pc['request_latency_steps_p99']:.1f} "
-          f"(n={pc['request_latency_steps']['n']})")
+          f"p50={pc[f'{ns}.request_latency_steps_p50']:.1f} "
+          f"p99={pc[f'{ns}.request_latency_steps_p99']:.1f} "
+          f"(n={pc[f'{ns}.request_latency_steps']['n']})")
     if args.metrics_out:
         n = write_metrics_jsonl(args.metrics_out, probe.metrics)
         print(f"wrote {args.metrics_out}: {n} metrics")

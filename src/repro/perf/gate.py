@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Sequence
 
 from .serve_cell import SERVE_GATED_METRICS
 from .sharded_cell import SHARDED_GATED_METRICS
+from .transform_cell import TRANSFORM_GATED_METRICS
 from .sweep import (
     GATED_METRICS,
     SCHEMA_VERSION,
@@ -80,6 +81,15 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
     "request_latency_steps.p50": 0.05,
     "request_latency_steps.p95": 0.10,
     "request_latency_steps.p99": 0.10,
+    # In-flight transform cells (schema v6, DESIGN.md §9). Bandwidths come
+    # from the deterministic cycle model; fidelity is a seeded roundtrip
+    # through the numpy oracle, so all of these are exact on an unchanged
+    # tree and the bands only absorb intentional re-scoping.
+    "effective_bandwidth_fp32": 0.03,
+    "effective_bandwidth_int8": 0.03,
+    "effective_bandwidth_gain": 0.03,
+    "fidelity_max_rel_err": 0.10,
+    "transform_fusion_hit_rate": 0.03,
 }
 
 #: Histogram-valued gated metrics (schema v5): the cell stores the full
@@ -108,14 +118,21 @@ METRIC_POLARITY: Dict[str, int] = {
     "request_latency_steps_p50": -1,
     "request_latency_steps_p99": -1,
     "request_latency_steps": -1,   # applied at each gated percentile
+    "effective_bandwidth_fp32": +1,
+    "effective_bandwidth_int8": +1,
+    "effective_bandwidth_gain": +1,
+    "fidelity_max_rel_err": -1,
+    "transform_fusion_hit_rate": +1,
 }
 
 ALL_GATED_METRICS = (tuple(GATED_METRICS) + tuple(SERVE_GATED_METRICS)
-                     + tuple(SHARDED_GATED_METRICS))
+                     + tuple(SHARDED_GATED_METRICS)
+                     + tuple(TRANSFORM_GATED_METRICS))
 
 _KIND_METRICS = {
     "serve": SERVE_GATED_METRICS,
     "sharded": SHARDED_GATED_METRICS,
+    "transform": TRANSFORM_GATED_METRICS,
 }
 
 
@@ -280,10 +297,18 @@ def quick_subset(doc: Dict[str, object]):
     ch = [c for c in dims["channel_counts"] if c in _QUICK_CHANNELS]
     lat = [m for m in dims["mem_latencies"] if m in _QUICK_LATENCIES]
     # Serve and sharded cells are already reduced-config; the quick sweep
-    # always runs them, so they always stay gated.
+    # always runs them, so they always stay gated. Transform cells keep
+    # only the quick (size, latency) grid a reduced sweep regenerates.
+    from .transform_cell import DEFAULT_TRANSFORM_SPEC
     cells = {k: c for k, c in doc["cells"].items()
-             if c.get("kind") in ("serve", "sharded")
-             or (c.get("channels") in ch and c.get("mem_latency") in lat)}
+             if (c.get("kind") == "transform"
+                 and c.get("mem_latency") in DEFAULT_TRANSFORM_SPEC
+                 .mem_latencies
+                 and c.get("transfer_bytes") in DEFAULT_TRANSFORM_SPEC
+                 .transfer_bytes)
+             or c.get("kind") in ("serve", "sharded")
+             or (c.get("kind") == "dma" and c.get("channels") in ch
+                 and c.get("mem_latency") in lat)}
     if not cells:
         raise GateError(
             "--quick: baseline has no cells in the quick dimensions "
@@ -383,6 +408,34 @@ def translation_summary(doc: Dict[str, object]) -> str:
     return "\n".join(lines)
 
 
+def transform_summary(doc: Dict[str, object]) -> str:
+    """Per-size int8-vs-fp32 effective-bandwidth table (DESIGN.md §9).
+
+    The live evidence for the in-flight transform claim: a quantized KV
+    transfer moves fewer bus beats at equal logical payload (gain > 1)
+    without trading away roundtrip fidelity, and every transform plan is
+    served by a transform-fused compiled executor.
+    """
+    rows = sorted(
+        ((int(c.get("transfer_bytes", 0)), int(c.get("mem_latency", 0)),
+          c.get("metrics", {}))
+         for c in doc["cells"].values() if c.get("kind") == "transform"))
+    if not rows:
+        return "transform: no transform cells in this document"
+    lines = ["transform: EF-int8 KV quantize vs fp32 effective bandwidth",
+             f"  {'bytes':>6}  {'L':>3}  {'bw_fp32':>8}  {'bw_int8':>8}  "
+             f"{'gain':>6}  {'fidelity':>8}  {'fusion':>6}"]
+    for nbytes, lat, m in rows:
+        lines.append(
+            f"  {nbytes:>6}  {lat:>3}  "
+            f"{m.get('effective_bandwidth_fp32', float('nan')):>8.3f}  "
+            f"{m.get('effective_bandwidth_int8', float('nan')):>8.3f}  "
+            f"{m.get('effective_bandwidth_gain', float('nan')):>5.2f}x  "
+            f"{m.get('fidelity_max_rel_err', float('nan')):>8.5f}  "
+            f"{m.get('transform_fusion_hit_rate', float('nan')):>6.2f}")
+    return "\n".join(lines)
+
+
 def serve_latency_summary(doc: Dict[str, object]) -> str:
     """p50/p99 request-latency table over the serve cells (DESIGN.md §8).
 
@@ -417,10 +470,12 @@ def _emit_summary(doc: Dict[str, object]) -> None:
     spec_text = speculation_summary(doc)
     sharded_text = sharded_summary(doc)
     translation_text = translation_summary(doc)
+    transform_text = transform_summary(doc)
     serve_text = serve_latency_summary(doc)
     print(spec_text)
     print(sharded_text)
     print(translation_text)
+    print(transform_text)
     print(serve_text)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if step_summary:
@@ -431,6 +486,8 @@ def _emit_summary(doc: Dict[str, object]) -> None:
                     "```\n" + sharded_text + "\n```\n")
             f.write("### Perf gate — translation cache\n\n"
                     "```\n" + translation_text + "\n```\n")
+            f.write("### Perf gate — in-flight transforms (int8 vs fp32)\n\n"
+                    "```\n" + transform_text + "\n```\n")
             f.write("### Perf gate — serve request latency (p50/p99)\n\n"
                     "```\n" + serve_text + "\n```\n")
 

@@ -25,6 +25,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.runtime import SubmitRequest
 from repro.runtime.instrumentation import PerfProbe
 
 
@@ -85,8 +86,8 @@ def run_serve_cell(
     for uid in range(spec.n_requests):
         n_prompt = int(rng.integers(spec.min_prompt, spec.max_prompt + 1))
         prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, n_prompt)]
-        eng.submit(Request(uid=uid, prompt=prompt,
-                           max_new_tokens=spec.max_new_tokens))
+        eng.submit(SubmitRequest(request=Request(
+            uid=uid, prompt=prompt, max_new_tokens=spec.max_new_tokens)))
 
     while ((eng.queue or any(s.busy for s in eng.slots))
            and eng.steps < spec.max_steps):
@@ -103,18 +104,21 @@ def run_serve_cell(
 
     pc = eng.perf_counters()
     metrics = {
-        "admission_stall_rate": float(pc["admission_stall_rate"]),
+        "admission_stall_rate": float(pc["serve.admission_stall_rate"]),
         "completion_poll_latency_steps":
-            float(pc["completion_poll_latency_steps"]),
-        "serve_steps_per_request": float(pc["steps"] / spec.n_requests),
+            float(pc["serve.completion_poll_latency_steps"]),
+        "serve_steps_per_request":
+            float(pc["serve.steps"] / spec.n_requests),
         # Tail latency (schema v5): end-to-end submit -> §II-D writeback in
         # decode steps. Steps are pure scheduling outcomes, so the whole
         # histogram (and hence its percentiles) regenerates bit-for-bit;
         # small-integer samples land in the width-1 linear buckets, making
         # p50/p99 *exact*, not bucket-floor approximations.
-        "request_latency_steps_p50": float(pc["request_latency_steps_p50"]),
-        "request_latency_steps_p99": float(pc["request_latency_steps_p99"]),
-        "request_latency_steps": dict(pc["request_latency_steps"]),
+        "request_latency_steps_p50":
+            float(pc["serve.request_latency_steps_p50"]),
+        "request_latency_steps_p99":
+            float(pc["serve.request_latency_steps_p99"]),
+        "request_latency_steps": dict(pc["serve.request_latency_steps"]),
     }
     serve_counters = {
         k: v for k, v in dataclasses.asdict(probe.serve).items()
@@ -122,9 +126,10 @@ def run_serve_cell(
     }
     counters = {
         "serve": serve_counters,
-        "speculation_depth": float(pc["speculation_depth"]),
+        "speculation_depth": float(pc["serve.speculation_depth"]),
         # Deterministic translation-cache traffic of the engine's runtime
-        # (event counts only — no wall clock).
-        "translation_cache": dict(pc["translation_cache"]),
+        # (event counts only — no wall clock). Stored raw (bare keys): the
+        # document layout is schema-versioned, not deprecation-aliased.
+        "translation_cache": eng.runtime._translation_stats_raw(),
     }
     return metrics, counters

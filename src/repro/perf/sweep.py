@@ -56,7 +56,7 @@ import numpy as np
 from repro.configs.registry import get_config, list_archs
 from repro.core.simulator import SimConfig, simulate, simulate_multichannel
 from repro.core.speculation import DEFAULT_DEPTH, FixedDepth
-from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
+from repro.runtime import ChannelConfig, DMARuntime, PerfProbe, SubmitRequest
 
 from .serve_cell import (
     DEFAULT_SERVE_SPEC,
@@ -69,8 +69,17 @@ from .sharded_cell import (
     SHARDED_GATED_METRICS,
     cell_entry as sharded_cell_entry,
 )
+from .transform_cell import (
+    DEFAULT_TRANSFORM_SPEC,
+    TRANSFORM_GATED_METRICS,
+    transform_cell_entries,
+)
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
+#: v6: in-flight transform cells (kind: "transform", DESIGN.md §9) —
+#: effective-bandwidth A/B of the EF-int8 quantize transform vs the fp32
+#: baseline at equal logical payload, roundtrip fidelity, and the
+#: chain-lowering JIT's transform-fusion hit rate.
 #: v5: serve-cell tail-latency histograms (DESIGN.md §8) — the serve cell
 #: gains ``request_latency_steps_p50``/``_p99`` scalars plus the
 #: histogram-valued ``request_latency_steps`` (fixed log2-bucket layout,
@@ -85,7 +94,7 @@ from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 #: surface (DESIGN.md §6). v2 added the speculation-policy metrics
 #: (spec_bus_utilization_*) on every DMA cell plus the end-to-end serve
 #: cell. Older baselines must be regenerated.
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 #: The gated perf surface of DMA cells. gate.py refuses documents missing
 #: any of these (serve cells gate SERVE_GATED_METRICS instead).
@@ -133,6 +142,8 @@ class SweepSpec:
     include_serve: bool = True
     mesh_sizes: Sequence[int] = MESH_SIZES
     include_sharded: bool = True
+    #: In-flight transform cells (schema v6, DESIGN.md §9).
+    include_transforms: bool = True
     #: Chain-lowering JIT (DESIGN.md §7). False reproduces the uncached
     #: legacy dispatch path: hit rate reports 0.0 and launch speedup 1.0,
     #: so a disabled baseline is self-describing rather than vacuously
@@ -156,6 +167,7 @@ def default_spec(
     include_serve: bool = True,
     mesh_sizes: Optional[Sequence[int]] = None,
     include_sharded: bool = True,
+    include_transforms: bool = True,
     translation: bool = True,
 ) -> SweepSpec:
     if mode not in SCALES:
@@ -175,6 +187,7 @@ def default_spec(
         mesh_sizes=tuple(mesh_sizes if mesh_sizes is not None
                          else MESH_SIZES),
         include_sharded=include_sharded,
+        include_transforms=include_transforms,
         translation=translation,
     )
 
@@ -214,15 +227,16 @@ def _run_runtime_pass(arch: str, workload: str, channels: int,
 
     def submit_all():
         for d in wl.chains:
-            rt.submit(d, src_pool="src", dst_pool="dst", tier="serial")
+            rt.submit(SubmitRequest(chain=d, src_pool="src",
+                                    dst_pool="dst", tier="serial"))
         rt.drain_until_idle()
 
     submit_all()                       # cold round: plans + artifacts compile
-    cold = rt.translation_stats()
+    cold = rt._translation_stats_raw()
     warm_rounds = _WARM_ROUNDS if translation else 0
     for _ in range(warm_rounds):       # serve-shaped replays: same chains
         submit_all()
-    warm = rt.translation_stats()
+    warm = rt._translation_stats_raw()
     d_lookups = int(warm["lookups"]) - int(cold["lookups"])
     d_hits = int(warm["hits"]) - int(cold["hits"])
     steady_hit_rate = d_hits / d_lookups if d_lookups else 0.0
@@ -420,6 +434,18 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                     f"{k}={v:.3f}" for k, v in cell["metrics"].items()),
                     file=sys.stderr)
 
+    transform_cells = []
+    if spec.include_transforms:
+        for key, cell in transform_cell_entries(
+                spec.seed, DEFAULT_TRANSFORM_SPEC,
+                quick=spec.mode == "quick"):
+            cells[key] = cell
+            transform_cells.append(key)
+            if progress:
+                print(f"  {key}: " + " ".join(
+                    f"{k}={v:.3f}" for k, v in cell["metrics"].items()),
+                    file=sys.stderr)
+
     return {
         "schema_version": SCHEMA_VERSION,
         "mode": spec.mode,
@@ -434,10 +460,12 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
             "serve_cells": serve_cells,
             "mesh_sizes": list(spec.mesh_sizes),
             "sharded_cells": sharded_cells,
+            "transform_cells": transform_cells,
         },
         "gated_metrics": list(GATED_METRICS),
         "serve_gated_metrics": list(SERVE_GATED_METRICS),
         "sharded_gated_metrics": list(SHARDED_GATED_METRICS),
+        "transform_gated_metrics": list(TRANSFORM_GATED_METRICS),
         "cells": cells,
     }
 
@@ -454,6 +482,7 @@ def spec_from_doc(doc: Dict[str, object]) -> SweepSpec:
         include_serve=bool(dims.get("serve_cells")),
         mesh_sizes=dims.get("mesh_sizes", MESH_SIZES),
         include_sharded=bool(dims.get("sharded_cells")),
+        include_transforms=bool(dims.get("transform_cells")),
         translation=bool(doc.get("translation_cache_enabled", True)),
     )
 

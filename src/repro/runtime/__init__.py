@@ -32,3 +32,4 @@ from .scheduler import (  # noqa: F401
     SubmitResult,
     default_runtime,
 )
+from .submit import SubmitRequest, Ticket  # noqa: F401

@@ -41,12 +41,18 @@ from repro.core.engine import (
     execute_blocked_2d,
     execute_serial,
 )
+from repro.core.transform import (
+    TransformSpec,
+    as_transform,
+    transform_source_view,
+)
 
 from repro.obs.trace import Tracer, monotonic
 
 from .completion import CompletionQueue
 from .instrumentation import PerfProbe
 from .ring import RingFull, SubmissionRing
+from .submit import SubmitRequest, Ticket, warn_legacy_submit
 
 TIERS = ("serial", "blocked", "blocked_2d", "control")
 
@@ -80,6 +86,9 @@ class _Batch:
     # Compiled executor from the translation cache (repro.runtime.lowering);
     # None drains through the legacy tier engine.
     lowered: Optional[object] = None
+    # In-flight transform riding this chain (DESIGN.md §9); None/identity
+    # drains exactly as before.
+    transform: Optional[TransformSpec] = None
 
 
 @dataclasses.dataclass
@@ -139,14 +148,42 @@ class Channel:
 
     def submit(
         self,
-        d: DescriptorArray,
+        d,
         tickets: Sequence[int],
         *,
         src_pool: Optional[str] = None,
         dst_pool: Optional[str] = None,
         lowered: Optional[object] = None,
+    ):
+        """Push one chain into the ring; raises RingFull under backpressure.
+
+        Unified form (DESIGN.md §9): ``submit(SubmitRequest, tickets,
+        lowered=...) -> Ticket``. ``tickets`` and ``lowered`` stay
+        call-level operands (the scheduler allocates tickets and holds
+        the compiled artifact). The legacy keyword form
+        ``submit(chain, tickets, src_pool=..., dst_pool=...)`` still
+        works for one release, returns the bare slot list, and emits a
+        DeprecationWarning.
+        """
+        if isinstance(d, SubmitRequest):
+            spec = as_transform(d.transform)
+            slots = self._push(d.chain, tickets, d.src_pool, d.dst_pool,
+                               lowered, spec)
+            return Ticket(tickets=list(map(int, tickets)),
+                          channel=self.name, spilled=False,
+                          slots=slots, transform=spec.cache_token)
+        warn_legacy_submit("Channel.submit")
+        return self._push(d, tickets, src_pool, dst_pool, lowered, None)
+
+    def _push(
+        self,
+        d: DescriptorArray,
+        tickets: Sequence[int],
+        src_pool: Optional[str],
+        dst_pool: Optional[str],
+        lowered: Optional[object],
+        transform: Optional[TransformSpec],
     ) -> List[int]:
-        """Push one chain into the ring; raises RingFull under backpressure."""
         n = d.num_descriptors
         if n != len(tickets):
             raise ValueError("one ticket per descriptor")
@@ -171,7 +208,8 @@ class Channel:
             self.probe.on_occupancy(self.name, occupancy)
         if self.cfg.tier != "control":
             self.pending.append(_Batch(list(map(int, tickets)), slots, d,
-                                       src_pool, dst_pool, lowered))
+                                       src_pool, dst_pool, lowered,
+                                       transform))
         return slots
 
     # -- execution ----------------------------------------------------------
@@ -202,6 +240,24 @@ class Channel:
             raise ValueError(f"tier {tier!r} carries no data")
         return out
 
+    def _execute_transformed(self, t: Optional[TransformSpec],
+                             d: DescriptorArray, src: jax.Array,
+                             dst: jax.Array) -> jax.Array:
+        """Legacy-engine drain with the in-flight transform applied.
+
+        Read-side transforms (kv_int8, transpose) substitute the source
+        pool with its transformed view; reduce_sum copies into a zero
+        target (chain-order last-write-wins) and adds it into the
+        destination — the semantics :func:`repro.core.transform.
+        reference_apply` oracles.
+        """
+        if t is None or t.is_identity:
+            return self._execute(d, src, dst)
+        if t.kind == "reduce_sum":
+            copied = self._execute(d, src, jnp.zeros_like(dst))
+            return dst + copied
+        return self._execute(d, transform_source_view(t, src), dst)
+
     def drain_one(self, pools: Dict[str, jax.Array]) -> bool:
         """Execute the oldest pending batch against the named pools.
 
@@ -218,11 +274,12 @@ class Channel:
         out = None
         if b.lowered is not None:
             # Translation-cache fast path: a compiled artifact for this
-            # chain's signature. It declines (None) whenever substituting
-            # for the legacy engine could change a single bit.
+            # chain's signature (transform token included, so a fused
+            # artifact applies the transform). It declines (None) whenever
+            # substituting for the legacy engine could change a single bit.
             out = b.lowered(b.descs, src, dst, max_len=self.cfg.max_len)
         if out is None:
-            out = self._execute(b.descs, src, dst)
+            out = self._execute_transformed(b.transform, b.descs, src, dst)
         pools[b.dst_pool] = out
         dt = monotonic() - t0
         for slot in b.slots:

@@ -77,6 +77,7 @@ def coalesce(
     max_len: int,
     head: int = 0,
     spec_depth: int = 0,
+    allow_merge: bool = True,
 ) -> Tuple[DescriptorArray, CoalesceStats]:
     """Plan a chain for submission: merge, split, sequential layout.
 
@@ -94,6 +95,12 @@ def coalesce(
     feedback contract) rather than changing the plan; it never alters the
     planned chain, keeping ``FixedDepth`` callers bit-identical to the
     pre-policy planner.
+
+    ``allow_merge=False`` disables the merge pass (split and sequential
+    layout still run). The runtime sets it from the submission's
+    :attr:`repro.core.transform.TransformSpec.merge_safe`: a transform
+    whose source-view contiguity differs from pool contiguity (transpose)
+    must execute its descriptors unfused.
     """
     if max_len < 1:
         raise ValueError("max_len must be >= 1")
@@ -118,7 +125,7 @@ def coalesce(
                           and m_dst[-1] + m_len[-1] == dst[k])
             same_cfg = m_cfg[-1] == cfg[k]
             irq_barrier = bool(m_cfg[-1] & CONFIG_IRQ_ENABLE)
-            if contiguous and same_cfg and not irq_barrier:
+            if allow_merge and contiguous and same_cfg and not irq_barrier:
                 m_len[-1] += int(ln[k])
                 merged += 1
                 continue

@@ -87,6 +87,10 @@ class TranslationCounters:
     evictions: int = 0     # artifacts dropped past the LRU bound
     plan_hits: int = 0     # coalescer-plan memo hits (digest match)
     plan_misses: int = 0   # plans computed fresh
+    transform_lookups: int = 0  # plans requested with a non-identity
+                                # transform token (DESIGN.md §9)
+    transform_fused: int = 0    # of those, served by a transform-fused
+                                # compiled executor
 
 
 @dataclasses.dataclass
@@ -185,6 +189,10 @@ class PerfProbe:
             t.plan_hits += 1
         elif event == "plan_miss":
             t.plan_misses += 1
+        elif event == "transform_lookup":
+            t.transform_lookups += 1
+        elif event == "transform_fused":
+            t.transform_fused += 1
         else:
             raise ValueError(f"unknown translation event {event!r}")
 
@@ -229,3 +237,26 @@ class PerfProbe:
     def metrics_snapshot(self) -> Dict[str, Dict[str, object]]:
         """Histogram/gauge registry dump (wall-clock-bearing; not gated)."""
         return self.metrics.snapshot()
+
+    def perf_counters(self):
+        """Flat unified-namespace view of :meth:`snapshot` (DESIGN.md §9).
+
+        Canonical keys: ``channels.<name>.<field>``, ``serve.<field>``,
+        ``translation.<field>``. Bare serve/translation field names read
+        through deprecated aliases; per-channel fields have no bare form
+        (they were never unambiguous). ``snapshot()`` keeps the nested
+        legacy layout for stored BENCH documents.
+        """
+        from repro.obs.counters import PerfCounters
+        data: Dict[str, object] = {}
+        aliases: Dict[str, str] = {}
+        for name, c in sorted(self.channels.items()):
+            for k, v in dataclasses.asdict(c).items():
+                data[f"channels.{name}.{k}"] = v
+        for prefix, block in (
+                ("serve", dataclasses.asdict(self.serve)),
+                ("translation", dataclasses.asdict(self.translation))):
+            for k, v in block.items():
+                data[f"{prefix}.{k}"] = v
+                aliases[k] = f"{prefix}.{k}"
+        return PerfCounters(data, aliases=aliases)

@@ -60,6 +60,8 @@ from repro.core.signature import (
     pow2_bucket,
     signature_of,
 )
+from repro.core.transform import as_transform, kv8_roundtrip
+from repro.optim.compress import BLOCK
 
 from .coalesce import CoalesceStats
 from .instrumentation import PerfProbe
@@ -110,6 +112,50 @@ def _serial_copy(src_off, dst_off, ln, src, dst, *, width: int):
     return jax.lax.fori_loop(0, n, body, dst)
 
 
+# Transform-fused variants (DESIGN.md §9). jit-of-jit traces inline, so
+# each is ONE fused XLA program: the kv8 round trip / zero-target + add
+# compiles into the same artifact as the copy — no extra dispatch.
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _vector_copy_kv8(src_off, dst_off, ln, src, dst, *, width: int):
+    return _vector_copy(src_off, dst_off, ln, kv8_roundtrip(src), dst,
+                        width=width)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _serial_copy_kv8(src_off, dst_off, ln, src, dst, *, width: int):
+    return _serial_copy(src_off, dst_off, ln, kv8_roundtrip(src), dst,
+                        width=width)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _vector_copy_sum(src_off, dst_off, ln, src, dst, *, width: int):
+    return dst + _vector_copy(src_off, dst_off, ln, src,
+                              jnp.zeros_like(dst), width=width)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _serial_copy_sum(src_off, dst_off, ln, src, dst, *, width: int):
+    return dst + _serial_copy(src_off, dst_off, ln, src,
+                              jnp.zeros_like(dst), width=width)
+
+
+#: (mode, transform token) -> fused executor. Tokens outside this table
+#: (transpose) have no compiled artifact: the lowered path declines and
+#: the channel's legacy transformed drain runs instead.
+_EXEC = {
+    ("vector", ""): _vector_copy,
+    ("serial", ""): _serial_copy,
+    ("vector", "kv8"): _vector_copy_kv8,
+    ("serial", "kv8"): _serial_copy_kv8,
+    ("vector", "sum"): _vector_copy_sum,
+    ("serial", "sum"): _serial_copy_sum,
+}
+
+#: Tokens the lowered serial path can fuse.
+FUSEABLE_TOKENS = ("", "kv8", "sum")
+
+
 def _pad_block(so: np.ndarray, do: np.ndarray, ln: np.ndarray,
                n_pad: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pad operands to the signature's descriptor bucket (ln == -1 idle)."""
@@ -146,6 +192,8 @@ class LoweredChain:
         from repro.kernels.descriptor_copy import descriptor_copy_bucketed
         from repro.kernels.ops import _interpret
 
+        if self.sig.transform:
+            return None   # fused 2-D batches are identity-only
         shape = dst.shape
         src2 = src.reshape(src.shape[0], -1)
         dst2 = dst.reshape(dst.shape[0], -1)
@@ -181,22 +229,42 @@ class LoweredChain:
                 return None
         so, do, ln = _pad_block(so, do, ln, self.sig.n_class)
         unit = self.sig.unit
+        token = self.sig.transform
         if (self.mode == "vector" and unit > 0 and self.sig.aligned
+                and token in ("", "kv8")
                 and src.shape[0] % unit == 0 and dst.shape[0] % unit == 0
                 and not np.any(so % unit) and not np.any(do % unit)):
             from repro.kernels.descriptor_copy import descriptor_copy_bucketed
             from repro.kernels.ops import _interpret
-            if not _interpret():
+            # The kv8 Pallas route needs row-local 256-blocks to equal the
+            # pool-absolute blocks of the transform contract: offsets are
+            # unit-multiples and the pool is a unit-multiple long, so
+            # unit % BLOCK == 0 makes the partitions coincide exactly.
+            kv8_ok = (token == "kv8" and unit % BLOCK == 0
+                      and src.dtype == jnp.float32)
+            if not _interpret() and (token == "" or kv8_ok):
                 # Uniform aligned units on TPU: whole-row moves through the
                 # Pallas mega-kernel over the unit-reshaped pools.
                 sidx = jnp.asarray(np.where(ln == unit, so // unit, -1))
                 didx = jnp.asarray(np.where(ln == unit, do // unit, -1))
                 self.dispatches += 1
-                out = descriptor_copy_bucketed(
-                    sidx, didx, src.reshape(-1, unit), dst.reshape(-1, unit),
-                    n_bucket=self.sig.n_class, interpret=False)
+                if token == "kv8":
+                    from repro.kernels.quantize_copy import (
+                        quantize_copy_bucketed,
+                    )
+                    out = quantize_copy_bucketed(
+                        sidx, didx, src.reshape(-1, unit),
+                        dst.reshape(-1, unit),
+                        n_bucket=self.sig.n_class, interpret=False)
+                else:
+                    out = descriptor_copy_bucketed(
+                        sidx, didx, src.reshape(-1, unit),
+                        dst.reshape(-1, unit),
+                        n_bucket=self.sig.n_class, interpret=False)
                 return out.reshape(dst.shape)
-        fn = _serial_copy if self.mode == "serial" else _vector_copy
+        fn = _EXEC.get((self.mode, token))
+        if fn is None:
+            return None
         self.dispatches += 1
         return fn(jnp.asarray(so), jnp.asarray(do), jnp.asarray(ln),
                   src, dst, width=self.sig.unit_class)
@@ -223,13 +291,16 @@ class _Plan:
     sig0: ChainSignature     # tier=""/depth=0 template; rebound per call
 
 
-def _plan_relative(canon: CanonicalChain, max_len: int) -> _Plan:
+def _plan_relative(canon: CanonicalChain, max_len: int,
+                   allow_merge: bool = True) -> _Plan:
     """Merge + split + sequential layout as vector passes.
 
     Element-wise contiguity against the predecessor is equivalent to the
     legacy loop's check against the accumulated run end: a run's end
     always equals its last member's end, so the transitive closure of the
     pairwise predicate reproduces the greedy loop exactly.
+    ``allow_merge=False`` mirrors ``coalesce(..., allow_merge=False)``:
+    every descriptor starts its own run (merge-unsafe transforms).
     """
     irq = int(CONFIG_IRQ_ENABLE)
     in_hit = estimate_hit_rate(canon.order * DESCRIPTOR_BYTES)
@@ -245,10 +316,13 @@ def _plan_relative(canon: CanonicalChain, max_len: int) -> _Plan:
         return _Plan(canon.n_raw, 0, 0, 0, in_hit, 1.0,
                      empty, empty, empty, empty, sig0)
 
-    mergeable = ((src[1:] == src[:-1] + ln[:-1])
-                 & (dst[1:] == dst[:-1] + ln[:-1])
-                 & (cfg[1:] == cfg[:-1])
-                 & ((cfg[:-1] & irq) == 0))
+    if allow_merge:
+        mergeable = ((src[1:] == src[:-1] + ln[:-1])
+                     & (dst[1:] == dst[:-1] + ln[:-1])
+                     & (cfg[1:] == cfg[:-1])
+                     & ((cfg[:-1] & irq) == 0))
+    else:
+        mergeable = np.zeros(max(n - 1, 0), bool)
     brk = np.empty(n, bool)
     brk[0] = True
     brk[1:] = ~mergeable
@@ -302,18 +376,28 @@ def disabled_stats() -> Dict[str, object]:
     """The counter block reported when translation is switched off."""
     return {"enabled": False, "hits": 0, "misses": 0, "evictions": 0,
             "size": 0, "capacity": 0, "lookups": 0, "hit_rate": 0.0,
-            "plan_hits": 0, "plan_misses": 0}
+            "plan_hits": 0, "plan_misses": 0,
+            "transform_lookups": 0, "transform_fused": 0,
+            "transform_fusion_hit_rate": 0.0}
 
 
 def aggregate_stats(blocks) -> Dict[str, object]:
-    """Sum per-shard translation-cache counter blocks (sharded serving)."""
+    """Sum per-shard translation-cache counter blocks (sharded serving).
+
+    Inputs and output are *raw* bare-key blocks; the public surfaces wrap
+    the result in the unified namespace (``repro.obs.counters``).
+    """
     out = disabled_stats()
     for b in blocks:
         out["enabled"] = out["enabled"] or bool(b.get("enabled"))
         for k in ("hits", "misses", "evictions", "size", "capacity",
-                  "lookups", "plan_hits", "plan_misses"):
+                  "lookups", "plan_hits", "plan_misses",
+                  "transform_lookups", "transform_fused"):
             out[k] += int(b.get(k, 0))
     out["hit_rate"] = out["hits"] / out["lookups"] if out["lookups"] else 0.0
+    out["transform_fusion_hit_rate"] = (
+        out["transform_fused"] / out["transform_lookups"]
+        if out["transform_lookups"] else 0.0)
     return out
 
 
@@ -335,6 +419,8 @@ class TranslationCache:
         self.evictions = 0
         self.plan_hits = 0
         self.plan_misses = 0
+        self.transform_lookups = 0
+        self.transform_fused = 0
         self.probe: Optional[PerfProbe] = None
         self.tracer = None          # repro.obs.trace.Tracer, via attach_tracer
         self.track = "translation"
@@ -364,20 +450,32 @@ class TranslationCache:
             "hit_rate": self.hits / lookups if lookups else 0.0,
             "plan_hits": self.plan_hits,
             "plan_misses": self.plan_misses,
+            "transform_lookups": self.transform_lookups,
+            "transform_fused": self.transform_fused,
+            "transform_fusion_hit_rate": (
+                self.transform_fused / self.transform_lookups
+                if self.transform_lookups else 0.0),
         }
 
     # -- plan memo -----------------------------------------------------------
     def plan(self, d: DescriptorArray, *, max_len: int, spec_depth: int = 0,
-             tier: str = "serial", head: int = 0) -> Optional[PlanResult]:
+             tier: str = "serial", head: int = 0,
+             transform=None) -> Optional[PlanResult]:
         """Coalesce ``d`` through the memo; None -> caller runs legacy.
 
         The returned planned chain and stats are bit-identical to
-        ``coalesce(d, max_len=max_len, spec_depth=spec_depth)``; malformed
-        chains (cycles, bad links) decline so the legacy walker raises its
-        canonical error.
+        ``coalesce(d, max_len=max_len, spec_depth=spec_depth,
+        allow_merge=transform.merge_safe)``; malformed chains (cycles,
+        bad links) decline so the legacy walker raises its canonical
+        error. A non-identity ``transform`` joins the signature as its
+        :attr:`~repro.core.transform.TransformSpec.cache_token`, so the
+        compiled artifact fuses the transform (DESIGN.md §9).
         """
         if max_len < 1 or spec_depth < 0:
             return None
+        spec = as_transform(transform)
+        token = spec.cache_token
+        allow_merge = spec.merge_safe
         tr = self.tracer
         rec = tr is not None and tr.sampled(self.plan_hits
                                             + self.plan_misses)
@@ -385,7 +483,7 @@ class TranslationCache:
         canon = canonicalize(d, head)
         if canon is None:
             return None
-        key = (canon.digest, int(max_len))
+        key = (canon.digest, int(max_len), allow_merge)
         plan = self._plans.get(key)
         plan_was_hit = plan is not None
         if plan is not None:
@@ -393,7 +491,7 @@ class TranslationCache:
             self.plan_hits += 1
             self._event("plan_hit")
         else:
-            plan = _plan_relative(canon, max_len)
+            plan = _plan_relative(canon, max_len, allow_merge)
             self._plans[key] = plan
             self.plan_misses += 1
             self._event("plan_miss")
@@ -415,8 +513,17 @@ class TranslationCache:
             output_hit_rate=plan.out_hit, provisioned_slack=spec_depth)
         sig = dataclasses.replace(
             plan.sig0, tier=tier,
-            depth_class=pow2_bucket(spec_depth) if spec_depth else 0)
-        lowered = self.lower(sig) if tier == "serial" and plan.n_out else None
+            depth_class=pow2_bucket(spec_depth) if spec_depth else 0,
+            transform=token)
+        fuseable = token in FUSEABLE_TOKENS
+        lowered = self.lower(sig) \
+            if tier == "serial" and plan.n_out and fuseable else None
+        if token:
+            self.transform_lookups += 1
+            self._event("transform_lookup")
+            if lowered is not None:
+                self.transform_fused += 1
+                self._event("transform_fused")
         if rec:
             tr.complete("translate.plan", self.track, p0 * 1e6,
                         (monotonic() - p0) * 1e6,

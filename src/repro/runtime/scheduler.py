@@ -38,7 +38,9 @@ from repro.core.speculation import (
     SpeculationPolicy,
     as_policy,
 )
+from repro.core.transform import TransformSpec, as_transform
 
+from repro.obs.counters import PerfCounters, namespaced
 from repro.obs.trace import Tracer, monotonic
 
 from .channel import (
@@ -52,16 +54,12 @@ from .completion import CompletionQueue, CompletionRecord
 from .instrumentation import PerfProbe
 from .lowering import TranslationCache, disabled_stats
 from .ring import RingFull
+from .submit import SubmitRequest, SubmitResult, Ticket, warn_legacy_submit
 
-
-@dataclasses.dataclass
-class SubmitResult:
-    """Handle returned by :meth:`DMARuntime.submit`."""
-
-    tickets: List[int]
-    channel: str
-    spilled: bool
-    coalesce: Optional[CoalesceStats]
+__all__ = [
+    "DMARuntime", "SubmitRequest", "SubmitResult", "Ticket",
+    "default_runtime",
+]
 
 
 @dataclasses.dataclass
@@ -71,6 +69,7 @@ class _Spilled:
     channel: str
     src_pool: Optional[str]
     dst_pool: Optional[str]
+    transform: Optional[TransformSpec] = None
 
 
 def _is_sequential_chain(d: DescriptorArray) -> bool:
@@ -198,15 +197,49 @@ class DMARuntime:
             self._ticket_channel[tk] = channel
         return t
 
-    def _pick_channel(self, tier: Optional[str]) -> str:
+    def _pick_channel(self, tier: Optional[str], priority: int = 0) -> str:
         eligible = [name for name, ch in self.channels.items()
                     if tier is None or ch.cfg.tier == tier]
         if not eligible:
             raise ValueError(f"no channel with tier {tier!r}")
+        if priority > 0:
+            # High-priority submissions bypass arbitration and take the
+            # eligible channel with the most free ring slots (head-of-line
+            # avoidance); ties break on name for determinism.
+            return min(eligible,
+                       key=lambda n: (-self.channels[n].ring.free_slots, n))
         name = self.arbiter.pick(eligible)
         return name if name is not None else eligible[0]
 
-    def submit(
+    def submit(self, d, **kw) -> Ticket:
+        """Plan a chain and enqueue it on a channel ring.
+
+        Unified form (DESIGN.md §9): ``submit(SubmitRequest) -> Ticket``,
+        carrying chain + pools + transform + priority + completion
+        callback. The legacy keyword form
+        ``submit(chain, src_pool=..., dst_pool=..., tier=...)`` keeps
+        working for one release behind a DeprecationWarning (``Ticket``
+        preserves the old ``SubmitResult`` field layout, so legacy
+        callers are unaffected by the return type).
+
+        Returns tickets (one per *planned* descriptor; the last ticket of
+        a submission always exists, so callers wanting one completion per
+        logical transfer hang their callback on ``tickets[-1]``).
+        """
+        if isinstance(d, SubmitRequest):
+            if kw:
+                raise TypeError(
+                    "unified submit takes a single SubmitRequest; put "
+                    f"{sorted(kw)} on the request")
+            return self._submit_impl(
+                d.chain, src_pool=d.src_pool, dst_pool=d.dst_pool,
+                channel=d.channel, tier=d.tier, on_complete=d.on_complete,
+                run_coalescer=d.run_coalescer,
+                transform=as_transform(d.transform), priority=d.priority)
+        warn_legacy_submit("DMARuntime.submit")
+        return self._submit_impl(d, **kw)
+
+    def _submit_impl(
         self,
         d: DescriptorArray,
         *,
@@ -216,13 +249,10 @@ class DMARuntime:
         tier: Optional[str] = None,
         on_complete: Optional[Callable[[CompletionRecord], None]] = None,
         run_coalescer: Optional[bool] = None,
-    ) -> SubmitResult:
-        """Plan a chain and enqueue it on a channel ring.
-
-        Returns tickets (one per *planned* descriptor; the last ticket of a
-        submission always exists, so callers wanting one completion per
-        logical transfer hang their callback on ``tickets[-1]``).
-        """
+        transform: Optional[TransformSpec] = None,
+        priority: int = 0,
+    ) -> Ticket:
+        spec = as_transform(transform)
         t0 = monotonic()
         n_raw = d.num_descriptors
         # Sampling key = the first ticket this submission will take; the
@@ -230,7 +260,8 @@ class DMARuntime:
         tr = self.tracer
         rec = tr is not None and tr.sampled(self._next_ticket)
         first_ticket = self._next_ticket
-        name = channel if channel is not None else self._pick_channel(tier)
+        name = channel if channel is not None \
+            else self._pick_channel(tier, priority)
         ch = self.channels[name]
 
         stats: Optional[CoalesceStats] = None
@@ -257,13 +288,14 @@ class DMARuntime:
                 # which raises the canonical error.
                 planned = self.translation.plan(
                     d, max_len=max_len, spec_depth=ch.speculation_depth,
-                    tier=ch.cfg.tier)
+                    tier=ch.cfg.tier, transform=spec)
             if planned is not None:
                 d, stats, lowered = (planned.planned, planned.stats,
                                      planned.lowered)
             else:
                 d, stats = coalesce(d, max_len=max_len,
-                                    spec_depth=ch.speculation_depth)
+                                    spec_depth=ch.speculation_depth,
+                                    allow_merge=spec.merge_safe)
             self.coalesce_in += stats.n_in
             self.coalesce_out += stats.n_out
             self._hit_rates.append(stats.input_hit_rate)
@@ -287,7 +319,8 @@ class DMARuntime:
                 tr.complete("submit", ch.track, t0 * 1e6, dt * 1e6,
                             ticket=first_ticket, channel=name,
                             n_in=n_raw, n_out=0)
-            return SubmitResult([], name, False, stats)
+            return Ticket([], name, False, stats,
+                          transform=spec.cache_token)
 
         # A chain longer than the ring is submitted in ring-sized pieces
         # (the driver can never map more descriptors than slots at once).
@@ -320,9 +353,10 @@ class DMARuntime:
             cursor += k
             while True:
                 try:
-                    ch.submit(piece, piece_tickets,
-                              src_pool=src_pool, dst_pool=dst_pool,
-                              lowered=lowered)
+                    ch.submit(SubmitRequest(chain=piece, src_pool=src_pool,
+                                            dst_pool=dst_pool,
+                                            transform=spec),
+                              piece_tickets, lowered=lowered)
                     break
                 except RingFull:
                     if self.backpressure == "block":
@@ -332,7 +366,8 @@ class DMARuntime:
                             raise  # ring full of unacknowledged work
                     else:
                         self._spill.append(_Spilled(
-                            piece, piece_tickets, name, src_pool, dst_pool))
+                            piece, piece_tickets, name, src_pool, dst_pool,
+                            spec))
                         spilled = True
                         break
         self.submitted_descriptors += n
@@ -346,18 +381,19 @@ class DMARuntime:
             tr.complete("submit", ch.track, t0 * 1e6, launch * 1e6,
                         ticket=tickets[0], channel=name,
                         n_in=n_raw, n_out=n, spilled=spilled)
-        return SubmitResult(tickets, name, spilled, stats)
+        return Ticket(tickets, name, spilled, stats,
+                      transform=spec.cache_token)
 
     def submit_control(self, payload: int = 0, *,
                        channel: Optional[str] = None,
-                       on_complete=None) -> SubmitResult:
+                       on_complete=None) -> Ticket:
         """One IRQ-enabled control descriptor (no data movement)."""
         d = DescriptorArray.create(
             [payload], [0], [0],
             nxt=[-1], config=[int(CONFIG_IRQ_ENABLE)])
-        return self.submit(d, channel=channel, tier=None if channel else
-                           "control", on_complete=on_complete,
-                           run_coalescer=False)
+        return self.submit(SubmitRequest(
+            chain=d, channel=channel, tier=None if channel else "control",
+            on_complete=on_complete, run_coalescer=False))
 
     # -- out-of-band completion (control descriptors) -----------------------
     def complete(self, ticket: int) -> None:
@@ -374,8 +410,9 @@ class DMARuntime:
             s = self._spill.popleft()
             ch = self.channels[s.channel]
             if ch.can_accept(s.d.num_descriptors):
-                ch.submit(s.d, s.tickets, src_pool=s.src_pool,
-                          dst_pool=s.dst_pool)
+                ch.submit(SubmitRequest(chain=s.d, src_pool=s.src_pool,
+                                        dst_pool=s.dst_pool,
+                                        transform=s.transform), s.tickets)
             else:
                 still.append(s)
         self._spill = still
@@ -411,6 +448,14 @@ class DMARuntime:
             if ch.cfg.tier != "blocked_2d" or ch.cfg.use_kernel:
                 continue
             while ch.pending:
+                # Fusion concatenates descriptor streams, which is only
+                # sound when every batch moves raw bytes: a transformed
+                # batch stays pending and drains (with its transform) via
+                # the per-channel path, blocking later batches on this
+                # channel from fusing ahead of it this round.
+                if ch.pending[0].transform is not None \
+                        and not ch.pending[0].transform.is_identity:
+                    break
                 b = ch.pending.popleft()
                 groups.setdefault((b.src_pool, b.dst_pool), []).append((ch, b))
         ran = 0
@@ -498,11 +543,20 @@ class DMARuntime:
                 for name, ch in self.channels.items()}
 
     # -- stats ---------------------------------------------------------------
-    def translation_stats(self) -> Dict[str, object]:
-        """Translation-cache counters (zeros + enabled=False when off)."""
+    def _translation_stats_raw(self) -> Dict[str, object]:
+        """Bare-key counter block (internal aggregation / wrapping input)."""
         if self.translation is None:
             return disabled_stats()
         return self.translation.stats()
+
+    def translation_stats(self) -> PerfCounters:
+        """Translation-cache counters, unified ``translation.*`` namespace.
+
+        Old bare keys (``hits``, ``lookups``, ``hit_rate``, …) remain
+        readable as deprecated aliases for one release (DESIGN.md §9).
+        Zeros + ``translation.enabled`` False when lowering is off.
+        """
+        return namespaced(self._translation_stats_raw(), "translation")
 
     def stats(self) -> Dict[str, object]:
         per_channel = {

@@ -1,0 +1,86 @@
+"""The unified submit contract (DESIGN.md §9).
+
+Historically the four submission layers took divergent signatures and
+returned different ticket types:
+
+* ``Channel.submit(d, tickets, *, src_pool=, dst_pool=)``  → ``List[int]``
+* ``DMARuntime.submit(d, *, src_pool=, dst_pool=, tier=)`` → ``SubmitResult``
+* ``ServeEngine.submit(request)``                          → ``None``
+* ``ShardedServeEngine.submit(request)``                   → ``int`` (shard)
+
+This module defines the one contract all four now accept: a
+:class:`SubmitRequest` (chain + transform + priority + completion
+callback) in, a :class:`Ticket` out. The legacy keyword forms keep
+working for one release behind deprecation shims (each layer detects a
+non-``SubmitRequest`` first argument, emits a :class:`DeprecationWarning`
+via :func:`warn_legacy_submit`, and returns the legacy type).
+
+``Ticket`` subsumes the old ``SubmitResult`` — same leading fields in
+the same positional order — so ``SubmitResult`` is now an alias and
+existing unpacking/attribute code is unaffected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, List, Optional
+
+from repro.core.transform import TransformLike
+
+
+def warn_legacy_submit(api: str) -> None:
+    """One DeprecationWarning per legacy-keyword submit call site."""
+    warnings.warn(
+        f"{api} with legacy keyword arguments is deprecated; pass a "
+        "SubmitRequest (repro.runtime.SubmitRequest). The keyword form "
+        "is removed one release after 0.4.",
+        DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass
+class SubmitRequest:
+    """One descriptor-chain (or serve-request) submission, any layer.
+
+    ``chain`` + pool names drive the runtime/channel layers; ``request``
+    carries a serve-level ``Request`` for the engine layers. ``transform``
+    is anything :func:`repro.core.transform.as_transform` accepts.
+    ``priority > 0`` asks the scheduler to place the chain on the
+    eligible channel with the most free ring slots (head-of-line
+    avoidance) instead of round-robin arbitration.
+    """
+
+    chain: Any = None
+    request: Any = None
+    src_pool: Optional[str] = None
+    dst_pool: Optional[str] = None
+    channel: Optional[str] = None
+    tier: Optional[str] = None
+    transform: TransformLike = None
+    priority: int = 0
+    on_complete: Optional[Callable[[Any], None]] = None
+    run_coalescer: Optional[bool] = None
+
+
+@dataclasses.dataclass
+class Ticket:
+    """What every unified submit path returns.
+
+    The first four fields are the old ``SubmitResult`` layout (position
+    and name); the trailing fields are filled by whichever layer has
+    them (``slots`` by channels, ``shard`` by the sharded engine,
+    ``uid`` by the serve engines, ``transform`` whenever a non-identity
+    transform rode the submission).
+    """
+
+    tickets: List[int]
+    channel: str
+    spilled: bool
+    coalesce: Any = None
+    slots: Optional[List[int]] = None
+    shard: Optional[int] = None
+    uid: Optional[int] = None
+    transform: str = ""
+
+
+#: Deprecated alias — ``DMARuntime.submit`` used to return this.
+SubmitResult = Ticket

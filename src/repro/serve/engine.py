@@ -23,10 +23,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import DecodeState, decode_step
 from repro.models.transformer import init_decode_caches
+from repro.obs.counters import PerfCounters, namespaced
 from repro.obs.metrics import Histogram
 from repro.obs.trace import Tracer, monotonic
 from repro.runtime import ChannelConfig, DMARuntime
 from repro.runtime.instrumentation import PerfProbe
+from repro.runtime.submit import SubmitRequest, Ticket, warn_legacy_submit
 
 
 @dataclasses.dataclass
@@ -119,10 +121,16 @@ class ServeEngine:
         self.track = track
         self.runtime.attach_tracer(tracer, track_prefix=track_prefix)
 
-    def perf_counters(self) -> Dict[str, float]:
-        """Engine-side counters the perf sweep reads directly."""
+    def perf_counters(self) -> PerfCounters:
+        """Engine-side counters under the unified ``serve.*`` namespace.
+
+        Canonical keys are ``serve.<field>`` plus a nested ``translation``
+        block (itself ``translation.*``-namespaced); the old bare keys and
+        ``translation_cache`` read through deprecated aliases (DESIGN.md
+        §9).
+        """
         depths = self.runtime.speculation_depths()
-        return {
+        raw = {
             "steps": self.steps,
             "step_seconds": self.step_seconds,
             "active_slot_steps": self.active_slot_steps,
@@ -146,15 +154,40 @@ class ServeEngine:
             # policy's current decision).
             "speculation_depth":
                 float(np.mean(list(depths.values()))) if depths else 0.0,
-            # Chain-lowering JIT counters of the runtime under this engine
-            # (DESIGN.md §7): artifact hit/miss/evict + plan-memo traffic.
-            "translation_cache": self.runtime.translation_stats(),
         }
+        # Chain-lowering JIT counters of the runtime under this engine
+        # (DESIGN.md §7): artifact hit/miss/evict + plan-memo traffic.
+        return namespaced(
+            raw, "serve",
+            extra={"translation": self.runtime.translation_stats()},
+            extra_aliases={"translation_cache": "translation"})
 
     # -- API -------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req) -> Optional[Ticket]:
+        """Admit a request for continuous batching.
+
+        The unified form takes a :class:`~repro.runtime.SubmitRequest`
+        whose ``request`` field is the serve :class:`Request` (``transform``
+        / ``priority`` / ``on_complete`` ride along) and returns the
+        completion-descriptor :class:`~repro.runtime.Ticket` with ``uid``
+        set. The legacy positional-``Request`` form still works for one
+        release but warns and keeps returning ``None``.
+        """
+        if isinstance(req, SubmitRequest):
+            if req.request is None:
+                raise ValueError(
+                    "ServeEngine.submit needs SubmitRequest.request set to "
+                    "a serve Request")
+            return self._admit_request(req.request,
+                                       on_complete=req.on_complete)
+        warn_legacy_submit("ServeEngine.submit")
+        self._admit_request(req)
+        return None
+
+    def _admit_request(self, req: Request, on_complete=None) -> Ticket:
         res = self.runtime.submit_control(
-            payload=req.uid, channel=self._completion_channel)
+            payload=req.uid, channel=self._completion_channel,
+            on_complete=on_complete)
         self._tickets[req.uid] = res.tickets[-1]
         self._ticket_uid[res.tickets[-1]] = req.uid
         self._submitted_at[req.uid] = self.steps
@@ -167,6 +200,7 @@ class ServeEngine:
                            ticket=res.tickets[-1], uid=req.uid)
             tr.instant("request.submit", self.track, uid=req.uid,
                        ticket=res.tickets[-1])
+        return dataclasses.replace(res, uid=req.uid)
 
     def poll_completed(self) -> List[Request]:
         """Scheduler-side completion polling via descriptor writeback flags.

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.chain import from_pages
 from repro.core.descriptor import DescriptorArray
 from repro.core.prefetch import estimate_hit_rate
-from repro.runtime import DMARuntime
+from repro.runtime import DMARuntime, SubmitRequest
 
 
 class OutOfPages(RuntimeError):
@@ -153,10 +153,13 @@ class PagedKVCache:
             np.asarray(src_pages, np.int64),
             np.asarray(dst_pages, np.int64),
             np.ones(len(src_pages), np.int64))
-        rt.submit(moves, src_pool=self._POOL_K, dst_pool=self._POOL_K,
-                  channel=channel, tier=None if channel else "blocked_2d")
-        rt.submit(moves, src_pool=self._POOL_V, dst_pool=self._POOL_V,
-                  channel=channel, tier=None if channel else "blocked_2d")
+        tier = None if channel else "blocked_2d"
+        rt.submit(SubmitRequest(chain=moves, src_pool=self._POOL_K,
+                                dst_pool=self._POOL_K, channel=channel,
+                                tier=tier))
+        rt.submit(SubmitRequest(chain=moves, src_pool=self._POOL_V,
+                                dst_pool=self._POOL_V, channel=channel,
+                                tier=tier))
         rt.drain_until_idle()
         self.k_pages = rt.pool(self._POOL_K)
         self.v_pages = rt.pool(self._POOL_V)

@@ -422,7 +422,10 @@ def test_runtime_stats_and_disabled_escape_hatch():
     _, rt_off, _, _ = _drain_workload("qwen2.5-3b", "paged_kv",
                                       translation=False, rounds=1)
     off = rt_off.stats()["translation_cache"]
-    assert off == disabled_stats()
+    # The public stats block is namespaced (DESIGN.md §9); the raw
+    # bare-key block is the canonical disabled sentinel.
+    assert off["translation.enabled"] is False
+    assert rt_off._translation_stats_raw() == disabled_stats()
     assert rt_off.translation is None
 
 

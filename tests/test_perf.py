@@ -88,7 +88,8 @@ def _mini_spec(seed=0):
         "quick", seed, archs=[list_archs()[0]],
         workloads=["paged_kv", "moe_dispatch"],
         channel_counts=[2], mem_latencies=[13], repeats=2,
-        include_serve=False, include_sharded=False)
+        include_serve=False, include_sharded=False,
+        include_transforms=False)
 
 
 def test_sweep_document_is_bit_for_bit_deterministic():
@@ -99,7 +100,7 @@ def test_sweep_document_is_bit_for_bit_deterministic():
 
 def test_sweep_document_schema_and_counters():
     doc = run_sweep(_mini_spec())
-    assert doc["schema_version"] == 5
+    assert doc["schema_version"] == 6
     assert doc["translation_cache_enabled"] is True
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -151,7 +152,8 @@ def test_adaptive_matches_fixed_on_sequential_beats_it_on_storms():
         "quick", 0, archs=[list_archs()[0]],
         workloads=["paged_kv", "moe_dispatch", "defrag_churn"],
         channel_counts=[4], mem_latencies=[13, 100], repeats=1,
-        include_serve=False, include_sharded=False)
+        include_serve=False, include_sharded=False,
+        include_transforms=False)
     doc = run_sweep(spec)
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -172,7 +174,7 @@ def test_committed_baseline_upholds_adaptive_claim():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_perf.json"
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == 5
+    assert doc["schema_version"] == 6
     checked = 0
     for key, cell in doc["cells"].items():
         if cell.get("kind") != "dma":

@@ -521,7 +521,8 @@ def _mini_spec(include_serve=False):
                         workloads=["paged_kv"], channel_counts=[2],
                         mem_latencies=[100], repeats=2,
                         include_serve=include_serve,
-                        include_sharded=False)
+                        include_sharded=False,
+                        include_transforms=False)
 
 
 def test_end_to_end_unchanged_tree_passes(tmp_path):

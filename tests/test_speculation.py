@@ -53,7 +53,7 @@ def test_default_policy_matches_simulator_and_kernel_default():
     """Single source of truth: SimConfig.speculation() and the kernels'
     default depth both come from DEFAULT_POLICY."""
     assert DEFAULT_POLICY.depth == DEFAULT_DEPTH == 4
-    assert SimConfig.speculation().prefetch == DEFAULT_DEPTH
+    assert SimConfig.speculation().prefetch == FixedDepth(DEFAULT_DEPTH)
 
     import inspect
     from repro.kernels import ops

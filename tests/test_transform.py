@@ -1,0 +1,359 @@
+"""In-flight transform engines + the unified submit contract (DESIGN.md §9).
+
+Covers the transform midend end to end: the EF-int8 round trip against
+its numpy oracle across every registry arch's KV shape, transform-aware
+coalescing (kv_int8 merges bit-identically, transpose never merges),
+fused-ingress reduction, the bucketed Pallas quantize-copy kernel, the
+four-layer ``SubmitRequest``/``Ticket`` contract with its deprecation
+shims, the ``SimConfig.prefetch`` int coercion, the unified perf-counter
+namespace, and priority channel selection.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.registry import list_archs
+from repro.core.chain import from_segments
+from repro.core.simulator import SimConfig, simulate
+from repro.core.speculation import FixedDepth
+from repro.core.transform import (
+    IDENTITY,
+    TransformSpec,
+    as_transform,
+    kv8_roundtrip,
+    kv8_roundtrip_np,
+    reference_apply,
+)
+from repro.runtime import (
+    ChannelConfig,
+    DMARuntime,
+    SubmitRequest,
+    Ticket,
+    coalesce,
+)
+
+POOL = 4096
+
+
+# ---------------------------------------------------------------------------
+# kv_int8 round trip: fidelity + oracle agreement across every registry arch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_kv8_roundtrip_all_archs_within_tolerance(arch):
+    """Quantize→dequantize on each arch's KV shape stays within the
+    EF-int8 half-step bound and lands on the numpy oracle's code grid."""
+    cfg = get_config(arch, reduced=True)
+    heads = cfg.num_kv_heads or 1
+    hd = cfg.head_dim_ or 8
+    rng = np.random.default_rng(list_archs().index(arch))
+    kv = rng.standard_normal((2, heads, 16, hd)).astype(np.float32)
+    got = np.asarray(kv8_roundtrip(jnp.asarray(kv)))
+    oracle = kv8_roundtrip_np(kv)
+    step = float(np.abs(kv).max()) / 127.0      # >= every per-block scale
+    assert got.shape == kv.shape and got.dtype == kv.dtype
+    assert float(np.max(np.abs(got - kv))) <= 0.5 * step + 1e-6, arch
+    # Device vs numpy arithmetic may flip a code right at a rounding
+    # boundary (1-ULP scale difference), never more than one step.
+    assert float(np.max(np.abs(got - oracle))) <= step + 1e-6, arch
+
+
+def test_kv8_roundtrip_is_idempotent():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(POOL).astype(np.float32)
+    once = kv8_roundtrip_np(x)
+    assert np.array_equal(kv8_roundtrip_np(once), once)
+
+
+# ---------------------------------------------------------------------------
+# Transform-aware coalescer
+# ---------------------------------------------------------------------------
+
+def _kv8_runtime_pass(run_coalescer):
+    rt = DMARuntime([ChannelConfig(name="ch0", tier="serial",
+                                   ring_capacity=128, max_len=512)])
+    rng = np.random.default_rng(7)
+    src = rng.standard_normal(POOL).astype(np.float32)
+    rt.register_pool("src", jnp.asarray(src))
+    rt.register_pool("dst", jnp.zeros(POOL, jnp.float32))
+    # Contiguous 64-elem segments so the merge pass genuinely fuses.
+    starts = np.arange(0, 1024, 64, dtype=np.int64)
+    d = from_segments(starts, starts + 2048,
+                      np.full(starts.size, 64, np.int64))
+    res = rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst",
+                                  transform="kv_int8",
+                                  run_coalescer=run_coalescer))
+    rt.drain_until_idle()
+    return src, d, np.asarray(rt.pool("dst")), res
+
+
+def test_kv8_coalesced_merge_is_bit_identical_to_unmerged():
+    """kv_int8 is pool-absolute, so merged and unmerged execution move
+    byte-for-byte identical payloads (the merge-safety contract)."""
+    src, d, merged, res_m = _kv8_runtime_pass(True)
+    _, _, unmerged, res_u = _kv8_runtime_pass(False)
+    assert res_m.coalesce is not None
+    assert res_m.coalesce.n_out < res_m.coalesce.n_in   # merging happened
+    assert np.array_equal(merged, unmerged)
+    ref = reference_apply(TransformSpec.kv_int8(), d, src,
+                          np.zeros(POOL, np.float32))
+    step = float(np.abs(src).max()) / 127.0
+    assert float(np.max(np.abs(merged - ref))) <= step + 1e-6
+
+
+def test_transpose_is_never_merged_and_matches_oracle():
+    spec = TransformSpec.transpose(64, 64)
+    assert not spec.merge_safe and IDENTITY.merge_safe
+    assert as_transform("kv_int8").merge_safe
+    starts = np.arange(0, 512, 64, dtype=np.int64)
+    d = from_segments(starts, starts + 2048,
+                      np.full(starts.size, 64, np.int64))
+    fused, fstats = coalesce(d, max_len=512)
+    unfused, ustats = coalesce(d, max_len=512, allow_merge=spec.merge_safe)
+    assert fstats.n_out < fstats.n_in          # mergeable without transform
+    assert ustats.n_out == ustats.n_in         # transpose submits unmerged
+
+    rt = DMARuntime([ChannelConfig(name="ch0", tier="serial",
+                                   ring_capacity=128, max_len=512)])
+    rng = np.random.default_rng(11)
+    src = rng.standard_normal(POOL).astype(np.float32)
+    rt.register_pool("src", jnp.asarray(src))
+    rt.register_pool("dst", jnp.zeros(POOL, jnp.float32))
+    rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst",
+                            transform=spec))
+    rt.drain_until_idle()
+    ref = reference_apply(spec, d, src, np.zeros(POOL, np.float32))
+    assert np.array_equal(np.asarray(rt.pool("dst")), ref)
+
+
+def test_reduce_sum_adds_into_destination():
+    rt = DMARuntime([ChannelConfig(name="ch0", tier="serial",
+                                   ring_capacity=128, max_len=512)])
+    rng = np.random.default_rng(13)
+    src = rng.standard_normal(POOL).astype(np.float32)
+    dst0 = rng.standard_normal(POOL).astype(np.float32)
+    rt.register_pool("src", jnp.asarray(src))
+    rt.register_pool("dst", jnp.asarray(dst0))
+    starts = np.arange(0, 256, 64, dtype=np.int64)
+    d = from_segments(starts, starts + 1024,
+                      np.full(starts.size, 64, np.int64))
+    rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst",
+                            transform="reduce_sum"))
+    rt.drain_until_idle()
+    ref = reference_apply(TransformSpec.reduce_sum(), d, src, dst0)
+    got = np.asarray(rt.pool("dst"))
+    np.testing.assert_allclose(got, ref, rtol=0, atol=1e-6)
+    # Untouched elements keep the original destination exactly.
+    touched = np.zeros(POOL, bool)
+    touched[1024:1280] = True
+    assert np.array_equal(got[~touched], dst0[~touched])
+
+
+# ---------------------------------------------------------------------------
+# Bucketed Pallas quantize-copy kernel vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def test_quantize_copy_kernel_interpret_matches_oracle():
+    from repro.kernels.quantize_copy import quantize_copy_bucketed
+
+    rows, unit = 8, 256
+    rng = np.random.default_rng(3)
+    src = rng.standard_normal((rows, unit)).astype(np.float32)
+    dst = rng.standard_normal((rows, unit)).astype(np.float32)
+    src_idx = np.array([0, 3, 5], np.int32)
+    dst_idx = np.array([1, 2, 4], np.int32)
+    out = np.asarray(quantize_copy_bucketed(
+        jnp.asarray(src_idx), jnp.asarray(dst_idx),
+        jnp.asarray(src), jnp.asarray(dst), n_bucket=4, interpret=True))
+    expected = dst.copy()
+    for s, t in zip(src_idx, dst_idx):
+        expected[t] = kv8_roundtrip_np(src[s])
+    step = float(np.abs(src).max()) / 127.0
+    moved = np.zeros(rows, bool)
+    moved[dst_idx] = True
+    assert float(np.max(np.abs(out[moved] - expected[moved]))) \
+        <= step + 1e-6
+    # Inactive (padded) grid steps and unaddressed rows stay untouched.
+    assert np.array_equal(out[~moved], dst[~moved])
+
+
+def test_quantize_copy_rejects_non_block_rows():
+    from repro.kernels.quantize_copy import quantize_copy
+
+    with pytest.raises(ValueError, match="not a multiple"):
+        quantize_copy(jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                      jnp.zeros((2, 100), jnp.float32),
+                      jnp.zeros((2, 100), jnp.float32), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# The unified submit contract: four layers, one SubmitRequest in, Ticket out
+# ---------------------------------------------------------------------------
+
+def _chain():
+    return from_segments(np.array([0, 64], np.int64),
+                         np.array([2048, 2112], np.int64),
+                         np.array([64, 64], np.int64))
+
+
+def _runtime():
+    rt = DMARuntime([ChannelConfig(name="ch0", tier="serial",
+                                   ring_capacity=64, max_len=512)])
+    rt.register_pool("src", jnp.arange(POOL, dtype=jnp.float32))
+    rt.register_pool("dst", jnp.zeros(POOL, jnp.float32))
+    return rt
+
+
+def test_runtime_submit_unified_returns_ticket_without_warning():
+    rt = _runtime()
+    done = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = rt.submit(SubmitRequest(chain=_chain(), src_pool="src",
+                                      dst_pool="dst",
+                                      on_complete=done.append))
+    assert isinstance(res, Ticket)
+    assert res.tickets and res.channel == "ch0"
+    rt.drain_until_idle()
+    rt.completion.poll()
+    assert len(done) == 1
+
+
+def test_runtime_legacy_keyword_submit_warns_and_still_works():
+    rt = _runtime()
+    with pytest.warns(DeprecationWarning, match="DMARuntime.submit"):
+        res = rt.submit(_chain(), src_pool="src", dst_pool="dst")
+    assert isinstance(res, Ticket) and res.tickets
+    rt.drain_until_idle()
+    assert np.asarray(rt.pool("dst"))[2048 + 5] == 5.0
+
+
+def test_channel_submit_unified_and_legacy_forms():
+    rt = _runtime()
+    ch = rt.channels["ch0"]
+    d = _chain()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = ch.submit(SubmitRequest(chain=d, src_pool="src",
+                                    dst_pool="dst"), [101, 102])
+    assert isinstance(t, Ticket) and t.tickets == [101, 102]
+    with pytest.warns(DeprecationWarning, match="Channel.submit"):
+        slots = ch.submit(d, [103, 104], src_pool="src", dst_pool="dst")
+    assert isinstance(slots, list) and len(slots) == 2
+
+
+def test_serve_engine_submit_unified_and_legacy_forms():
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config("mamba2-780m", reduced=True)
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, capacity=2, max_len=48)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = eng.submit(SubmitRequest(request=Request(
+            uid=0, prompt=[1, 2, 3], max_new_tokens=2)))
+    assert isinstance(t, Ticket) and t.uid == 0
+    with pytest.warns(DeprecationWarning, match="ServeEngine.submit"):
+        assert eng.submit(Request(uid=1, prompt=[1, 2],
+                                  max_new_tokens=2)) is None
+    with pytest.raises(ValueError, match="request"):
+        eng.submit(SubmitRequest(chain=_chain()))
+    done = eng.run(max_steps=200)
+    assert sorted(done) == [0, 1]
+
+    pc = eng.perf_counters()
+    assert pc["serve.completed"] == 2
+    # Legacy bare keys resolve through DeprecationWarning aliases…
+    with pytest.warns(DeprecationWarning, match="completed"):
+        assert pc["completed"] == 2
+    # …but iteration and JSON see only the canonical dotted namespace.
+    assert "completed" not in set(pc)
+    assert all("." in k or k == "translation" for k in pc)
+
+
+def test_sharded_serve_submit_unified_and_legacy_forms():
+    from repro.distributed.sharded_runtime import (
+        ShardedDMARuntime,
+        ShardedKVPool,
+        ShardedServeEngine,
+    )
+    from repro.models import init_params
+    from repro.serve import Request
+
+    cfg = get_config("qwen2.5-3b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    srt = ShardedDMARuntime(num_shards=2)
+    kv = ShardedKVPool(srt, num_pages=16, page=2, kv_heads=2, head_dim=4)
+    eng = ShardedServeEngine(params, cfg, runtime=srt, kv_pool=kv,
+                             capacity=1, max_len=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = eng.submit(SubmitRequest(request=Request(
+            uid=0, prompt=[1, 2], max_new_tokens=2,
+            kv_pages=kv.alloc_on(1, 2))))
+    assert isinstance(t, Ticket) and t.shard == 1 and t.uid == 0
+    with pytest.warns(DeprecationWarning, match="ShardedServeEngine.submit"):
+        shard = eng.submit(Request(uid=1, prompt=[3], max_new_tokens=2,
+                                   kv_pages=kv.alloc_on(0, 2)))
+    assert shard == 0                           # legacy return type: int
+    done = eng.run(max_steps=200)
+    assert sorted(done) == [0, 1]
+    pc = eng.perf_counters()
+    assert pc["sharded.completed"] == 2
+    assert pc["sharded.requests_per_shard"] == [1, 1]
+    with pytest.warns(DeprecationWarning):
+        assert pc["requests_per_shard"] == [1, 1]
+
+
+def test_priority_submission_takes_emptiest_eligible_channel():
+    rt = DMARuntime([
+        ChannelConfig(name="a", tier="serial", ring_capacity=64, max_len=512),
+        ChannelConfig(name="b", tier="serial", ring_capacity=64, max_len=512),
+    ])
+    rt.register_pool("src", jnp.arange(POOL, dtype=jnp.float32))
+    rt.register_pool("dst", jnp.zeros(POOL, jnp.float32))
+    # Load channel "a" so "b" has strictly more free ring slots.
+    rt.submit(SubmitRequest(chain=_chain(), src_pool="src", dst_pool="dst",
+                            channel="a"))
+    res = rt.submit(SubmitRequest(chain=_chain(), src_pool="src",
+                                  dst_pool="dst", priority=1))
+    assert res.channel == "b"
+    rt.drain_until_idle()
+
+
+# ---------------------------------------------------------------------------
+# SimConfig.prefetch coercion + transform-aware cycle accounting
+# ---------------------------------------------------------------------------
+
+def test_simconfig_bare_int_prefetch_coerces_with_warning():
+    with pytest.warns(DeprecationWarning, match="SimConfig.prefetch"):
+        cfg = dataclasses.replace(SimConfig.base(), prefetch=4)
+    assert isinstance(cfg.prefetch, FixedDepth)
+    assert cfg.prefetch.depth == 4
+
+
+def test_simconfig_factories_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        for cfg in (SimConfig.base(), SimConfig.translated_frontend(),
+                    SimConfig.logicore_ip(), SimConfig.speculation(),
+                    SimConfig.scaled()):
+            assert not isinstance(cfg.prefetch, int)
+
+
+def test_payload_ratio_charges_fewer_beats():
+    full = simulate(SimConfig.translated_frontend(), 13, 1024,
+                    num_transfers=64)
+    kv8 = simulate(SimConfig.translated_frontend(), 13, 1024,
+                   num_transfers=64,
+                   payload_ratio=TransformSpec.kv_int8().payload_ratio)
+    assert kv8.cycles < full.cycles
+    with pytest.raises(ValueError, match="payload_ratio"):
+        simulate(SimConfig.base(), 13, 1024, num_transfers=4,
+                 payload_ratio=0.0)

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Deprecation-shim lint: no internal legacy ``.submit(...)`` call sites.
+
+The unified submit contract (DESIGN.md §9) routes every submission —
+``Channel.submit``, ``DMARuntime.submit``, ``ServeEngine.submit``,
+``ShardedServeEngine.submit`` — through one ``SubmitRequest`` value. The
+legacy keyword forms still work behind deprecation shims for one release,
+but only for *external* callers: first-party code (``src/``,
+``benchmarks/``, ``examples/``) must not lean on its own shims, or the
+removal release breaks the repo itself.
+
+A call site is flagged when its first argument is not a
+``SubmitRequest(...)`` literal AND the call window shows a legacy shape:
+
+* a legacy chain-submit keyword (``src_pool=``, ``dst_pool=``, ``tier=``,
+  ``on_complete=``, ``run_coalescer=``) outside a ``SubmitRequest``
+  constructor, or
+* a bare serve ``Request(...)`` as the first argument.
+
+Calls that forward an existing ``SubmitRequest`` variable (for example the
+scheduler handing a request down to a channel with extra positional
+arguments) are fine — the lint keys on legacy *shape*, not on requiring a
+literal. ``tests/`` is exempt: the shim tests exist to pin the legacy
+forms until removal.
+
+Usage: python tools/lint_submit_api.py [--root DIR]
+Exit status 1 if any legacy call site is found (the CI lint job's gate).
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import pathlib
+import re
+import sys
+import tokenize
+
+SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+LEGACY_KWARGS = ("src_pool=", "dst_pool=", "tier=", "on_complete=",
+                 "run_coalescer=")
+CALL = re.compile(r"\.submit\(")
+
+
+def _call_window(text: str, open_paren: int) -> str:
+    """Return the balanced ``(...)`` argument window starting at open_paren."""
+    depth = 0
+    for i in range(open_paren, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return text[open_paren + 1:i]
+    return text[open_paren + 1:]
+
+
+def _strip_submit_request_args(window: str) -> str:
+    """Drop every ``SubmitRequest(...)`` literal (its kwargs are the new
+    contract, not legacy usage) so the legacy-keyword scan only sees
+    arguments passed directly to ``.submit`` itself."""
+    out = window
+    while True:
+        m = re.search(r"SubmitRequest\s*\(", out)
+        if m is None:
+            return out
+        inner = _call_window(out, m.end() - 1)
+        out = out[:m.start()] + out[m.end() + len(inner) + 1:]
+
+
+def _blank_strings_and_comments(text: str) -> str:
+    """Replace string/comment token contents with spaces (same offsets), so
+    docstrings describing the legacy forms don't trip the scan."""
+    out = list(text)
+    starts = [0]                       # starts[row-1] = offset of 1-based row
+    for ln in text.splitlines(keepends=True):
+        starts.append(starts[-1] + len(ln))
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except tokenize.TokenError:
+        return text
+    for tok in tokens:
+        if tok.type in (tokenize.STRING, tokenize.COMMENT):
+            a = starts[tok.start[0] - 1] + tok.start[1]
+            b = starts[tok.end[0] - 1] + tok.end[1]
+            for i in range(a, min(b, len(out))):
+                if out[i] != "\n":
+                    out[i] = " "
+    return "".join(out)
+
+
+def lint_file(path: pathlib.Path) -> list:
+    text = _blank_strings_and_comments(path.read_text())
+    findings = []
+    for m in CALL.finditer(text):
+        window = _call_window(text, m.end() - 1)
+        first_arg = window.lstrip()
+        if re.match(r"SubmitRequest\s*\(", first_arg):
+            continue
+        line = text.count("\n", 0, m.start()) + 1
+        if re.match(r"Request\s*\(", first_arg):
+            findings.append((line, "bare serve Request(...) — wrap it in "
+                                   "SubmitRequest(request=...)"))
+            continue
+        stripped = _strip_submit_request_args(window)
+        hit = [kw for kw in LEGACY_KWARGS if kw in stripped.replace(" ", "")]
+        if hit:
+            findings.append((line, "legacy keyword form "
+                                   f"({', '.join(hit)}) — pass a "
+                                   "SubmitRequest instead"))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=pathlib.Path,
+                    default=pathlib.Path(__file__).resolve().parent.parent)
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for rel in SCAN_DIRS:
+        base = args.root / rel
+        for path in sorted(base.rglob("*.py")):
+            for line, msg in lint_file(path):
+                print(f"{path.relative_to(args.root)}:{line}: "
+                      f"legacy submit call site: {msg}")
+                failures += 1
+    if failures:
+        print(f"\n{failures} legacy submit call site(s); first-party code "
+              "must use the unified SubmitRequest contract (DESIGN.md §9).",
+              file=sys.stderr)
+        return 1
+    print("submit-api lint: all first-party call sites use SubmitRequest")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
