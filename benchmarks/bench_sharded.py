@@ -1,5 +1,5 @@
 """Sharded-runtime benchmarks: per-mesh migration cells for
-BENCH_runtime.json (DESIGN.md §6).
+BENCH_runtime.json (DESIGN.md §6, §10).
 
 One entry per mesh size in {1, 2, 4, 8} — the same cell spec and seeds
 the perf sweep gates in BENCH_perf.json, but a *single* repeat, so any
@@ -8,30 +8,56 @@ document (including the cycle model, whose cross_fraction input is that
 median). The gated copies live in BENCH_perf.json; here they are
 *reported*, with the wall-clock migration drain time isolated under
 ``wall_clock``, which never enters the deterministic section.
+
+The ``wall_clock`` section also carries the two async-fabric trend
+series (benchmarks/trend.py): ``resize_mesh4_seconds`` — wall-clock of
+the mesh-4 elastic-resize scenario (foreground waves racing a paced
+background page handoff) — and ``migration_overlap_ratio_mesh4``, the
+gated overlap ratio echoed for drift tracking (deterministic, so any
+sustained *drop* is a real scheduling regression, not noise).
+
+``fabric="sync"`` is the escape hatch (``benchmarks/run.py
+--sync-fabric``): every cell re-runs through the synchronous blocking
+hop path, bit-identical to the pre-fabric migration planner.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from repro.perf.sharded_cell import (
     DEFAULT_SHARDED_SPEC,
     MESH_SIZES,
+    _resize_retention,
     run_sharded_cell,
 )
 
 
-def run(csv_rows: list, seed: int = 0) -> dict:
+def run(csv_rows: list, seed: int = 0, fabric: str = "async") -> dict:
+    spec = (DEFAULT_SHARDED_SPEC if fabric == "async"
+            else dataclasses.replace(DEFAULT_SHARDED_SPEC, fabric="sync"))
     cells = {}
     wall = {}
     for mesh in MESH_SIZES:
         t0 = time.perf_counter()
-        metrics, counters = run_sharded_cell(seed, mesh,
-                                             DEFAULT_SHARDED_SPEC,
-                                             repeats=1)
+        metrics, counters = run_sharded_cell(seed, mesh, spec, repeats=1)
         wall[f"mesh{mesh}_seconds"] = time.perf_counter() - t0
         cells[f"mesh{mesh}"] = {"metrics": metrics, "counters": counters}
         csv_rows.append((
             f"sharded_migration_mesh{mesh}", 0.0,
             f"cycles={metrics['cross_shard_migration_cycles']:.1f}/"
-            f"merge={metrics['migration_chain_merge_ratio']:.2f}"))
-    return {"cells": cells, "wall_clock": wall}
+            f"merge={metrics['migration_chain_merge_ratio']:.2f}/"
+            f"overlap={metrics['migration_overlap_ratio']:.2f}"))
+    # Trend series (async only; the sync escape hatch has no fabric to
+    # overlap and no paced handoff to time).
+    if fabric == "async":
+        t0 = time.perf_counter()
+        resize = _resize_retention(seed, 4, spec)
+        wall["resize_mesh4_seconds"] = time.perf_counter() - t0
+        wall["migration_overlap_ratio_mesh4"] = \
+            cells["mesh4"]["metrics"]["migration_overlap_ratio"]
+        csv_rows.append((
+            "sharded_resize_mesh4", wall["resize_mesh4_seconds"] * 1e6,
+            f"retained={resize['retained']:.2f}/"
+            f"handoff={resize['handoff_pages']}"))
+    return {"fabric": fabric, "cells": cells, "wall_clock": wall}

@@ -99,6 +99,12 @@ def main(argv=None) -> int:
                          "on effective bandwidth at equal fidelity "
                          "tolerance with every transform plan fused; "
                          "this is the CI perf-gate job's transform lane")
+    ap.add_argument("--sync-fabric", action="store_true",
+                    help="escape hatch: run the sharded migration benches "
+                         "through the synchronous blocking hop path "
+                         "(fabric='sync', bit-identical to the pre-fabric "
+                         "planner) instead of the async fabric "
+                         "(DESIGN.md §10)")
     ap.add_argument("--no-translation-cache", action="store_true",
                     help="escape hatch: run the legacy uncached dispatch "
                          "path everywhere (runtime benches and the perf "
@@ -143,7 +149,9 @@ def main(argv=None) -> int:
     bench_engine.run(csv_rows)
     runtime_metrics = bench_runtime.run(csv_rows, seed=args.seed,
                                         translation=translation)
-    runtime_metrics["sharded"] = bench_sharded.run(csv_rows, seed=args.seed)
+    runtime_metrics["sharded"] = bench_sharded.run(
+        csv_rows, seed=args.seed,
+        fabric="sync" if args.sync_fabric else "async")
     roofline.run(csv_rows)
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

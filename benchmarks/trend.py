@@ -31,7 +31,13 @@ from typing import List, Optional, Sequence
 #: stay one attribute test; a creeping ratio means someone put work on
 #: the tracing-off path).
 DRIFT_METRICS = ("launch_us_per_descriptor_mean", "warm_dispatch_us_mean",
-                 "tracing_off_overhead_ratio")
+                 "tracing_off_overhead_ratio", "resize_mesh4_seconds",
+                 "migration_overlap_ratio_mesh4")
+#: Metrics where *higher* is better: the drift check inverts for these,
+#: alerting when recent points all fall DRIFT_FACTOR *below* the trailing
+#: median. ``migration_overlap_ratio_mesh4`` is deterministic (DESIGN.md
+#: §10), so a sustained drop is a real fabric-scheduling regression.
+HIGHER_IS_BETTER = frozenset({"migration_overlap_ratio_mesh4"})
 #: Headline metric echoed when a point is appended.
 DRIFT_METRIC = DRIFT_METRICS[0]
 #: Alert when the newest point exceeds the median of the trailing window
@@ -110,6 +116,13 @@ def _check_one(series: List[dict], name: str) -> Optional[str]:
         return None
     baseline = sorted(window)[len(window) // 2]
     if baseline <= 0:
+        return None
+    if name in HIGHER_IS_BETTER:
+        if all(p < baseline / DRIFT_FACTOR for p in recent):
+            return (f"sustained drift: last {DRIFT_RUNS} runs of {name} "
+                    f"({', '.join(f'{p:.2f}' for p in recent)}) all fell "
+                    f"below 1/{DRIFT_FACTOR}x the trailing median "
+                    f"({baseline:.2f})")
         return None
     if all(p > DRIFT_FACTOR * baseline for p in recent):
         return (f"sustained wall-clock drift: last {DRIFT_RUNS} runs of "

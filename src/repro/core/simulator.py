@@ -499,6 +499,12 @@ class ShardedBusResult:
     interconnect_latency: int
     migration_cycles_mean: float
     interconnect_busy_beats: int
+    # Contended mode (per-directed-link buses) additions; the shared-bus
+    # default leaves num_links at 0 and keeps its original numbers.
+    interconnect_mode: str = "shared"
+    migration_cycles_p99: float = 0.0
+    num_links: int = 0
+    link_busy_beats_max: int = 0
 
 
 @dataclasses.dataclass
@@ -635,6 +641,7 @@ def simulate_multichannel(
     shard_of: Optional[List[int]] = None,
     cross_fraction: float = 0.0,
     interconnect_latency: Optional[int] = None,
+    interconnect_mode: str = "shared",
     seed: int = 0,
     tracer=None,
     trace_track_prefix: str = "sim/",
@@ -657,7 +664,19 @@ def simulate_multichannel(
     fabric between shards) carrying the payload plus one per-hop §II-D
     writeback beat. ``shard_of=None`` is the original single-bus model,
     bit-for-bit.
+
+    ``interconnect_mode`` picks the fabric model: ``"shared"`` (default,
+    bit-for-bit the original) serializes every hop through one bus;
+    ``"contended"`` gives each *directed* (src, dst) shard pair its own
+    link — hops only queue behind traffic on their own link, each hop's
+    destination drawn deterministically from the same per-channel rng
+    stream — and reports the per-hop stall tail
+    (``migration_cycles_p99``) the async fabric is gated against.
     """
+    if interconnect_mode not in ("shared", "contended"):
+        raise ValueError(
+            f"interconnect_mode must be 'shared' or 'contended', "
+            f"got {interconnect_mode!r}")
     if transfer_bytes % BUS_BYTES:
         raise ValueError("paper evaluates bus-aligned transfer sizes")
     if num_channels < 1:
@@ -728,34 +747,81 @@ def simulate_multichannel(
     # transfers migrate to a remote shard. Hops are granted FCFS in
     # local-completion order; each occupies the interconnect for the
     # payload plus the per-hop completion writeback beat.
-    hop_times: List[float] = []
-    if len(shards) > 1 and cross_fraction > 0.0:
-        for c in range(num_channels):
-            rng = np.random.default_rng([seed, shard_of[c], c])
-            e = np.asarray(ends[c])
-            hop_times.extend(e[rng.random(len(e)) < cross_fraction].tolist())
-    hop_times.sort()
-    ibus = _Bus(interconnect_latency)
     hop_beats = payload_beats_each + 1   # payload + §II-D writeback beat
-    added = []
-    for t in hop_times:
-        _, hop_end = ibus.fetch(t + 1, hop_beats)
-        added.append(hop_end - t)
-        last_end = max(last_end, hop_end)
-        if tracer is not None:
-            tracer.complete("migration.hop",
-                            f"{trace_track_prefix}interconnect",
-                            float(t), float(hop_end - t), clock="cycle",
-                            beats=hop_beats)
+    added: List[float] = []
+    num_links = 0
+    link_busy_max = 0
+    if interconnect_mode == "shared":
+        hop_times: List[float] = []
+        if len(shards) > 1 and cross_fraction > 0.0:
+            for c in range(num_channels):
+                rng = np.random.default_rng([seed, shard_of[c], c])
+                e = np.asarray(ends[c])
+                hop_times.extend(
+                    e[rng.random(len(e)) < cross_fraction].tolist())
+        hop_times.sort()
+        ibus = _Bus(interconnect_latency)
+        for t in hop_times:
+            _, hop_end = ibus.fetch(t + 1, hop_beats)
+            added.append(hop_end - t)
+            last_end = max(last_end, hop_end)
+            if tracer is not None:
+                tracer.complete("migration.hop",
+                                f"{trace_track_prefix}interconnect",
+                                float(t), float(hop_end - t), clock="cycle",
+                                beats=hop_beats)
+        n_hops = len(hop_times)
+    else:
+        # Contended fabric: one bus per *directed* (src, dst) pair, so a
+        # hop only stalls behind earlier traffic on its own link. The
+        # selection draws are identical to shared mode (same rng
+        # prefix); the destination draw comes after, so flipping the
+        # mode never changes *which* transfers migrate.
+        hops: List[Tuple[float, int, int]] = []
+        if len(shards) > 1 and cross_fraction > 0.0:
+            for c in range(num_channels):
+                rng = np.random.default_rng([seed, shard_of[c], c])
+                e = np.asarray(ends[c])
+                sel = rng.random(len(e)) < cross_fraction
+                remotes = [s for s in shards if s != shard_of[c]]
+                dst_idx = rng.integers(0, len(remotes), int(sel.sum()))
+                hops.extend(
+                    (float(t), shard_of[c], remotes[int(d)])
+                    for t, d in zip(e[sel], dst_idx))
+        hops.sort()
+        links: Dict[Tuple[int, int], _Bus] = {}
+        busy: Dict[Tuple[int, int], int] = {}
+        for t, s, d in hops:
+            ln = links.get((s, d))
+            if ln is None:
+                ln = links[(s, d)] = _Bus(interconnect_latency)
+            _, hop_end = ln.fetch(t + 1, hop_beats)
+            busy[(s, d)] = busy.get((s, d), 0) + hop_beats
+            added.append(hop_end - t)
+            last_end = max(last_end, hop_end)
+            if tracer is not None:
+                tracer.complete(
+                    "migration.hop",
+                    f"{trace_track_prefix}interconnect/link{s}-{d}",
+                    float(t), float(hop_end - t), clock="cycle",
+                    beats=hop_beats, src=s, dst=d)
+        n_hops = len(hops)
+        num_links = len(links)
+        link_busy_max = max(busy.values(), default=0)
     sharded = ShardedBusResult(
         num_shards=len(shards),
         per_shard_utilization=per_shard,
         mean_shard_utilization=float(np.mean(per_shard)),
-        cross_transfers=len(hop_times),
+        cross_transfers=n_hops,
         cross_fraction=cross_fraction,
         interconnect_latency=interconnect_latency,
         migration_cycles_mean=float(np.mean(added)) if added else 0.0,
-        interconnect_busy_beats=len(hop_times) * hop_beats,
+        interconnect_busy_beats=n_hops * hop_beats,
+        interconnect_mode=interconnect_mode,
+        migration_cycles_p99=float(np.percentile(added, 99))
+        if added else 0.0,
+        num_links=num_links,
+        link_busy_beats_max=link_busy_max,
     )
     agg = float(sum(per_shard))
     return MultiChannelResult(
@@ -775,6 +841,7 @@ def simulate_sharded(
     num_transfers: int = 500,
     cross_fraction: float = 0.0,
     interconnect_latency: Optional[int] = None,
+    interconnect_mode: str = "shared",
     seed: int = 0,
     tracer=None,
 ) -> MultiChannelResult:
@@ -787,7 +854,8 @@ def simulate_sharded(
         num_shards * channels_per_shard, mem_latency, transfer_bytes,
         num_transfers=num_transfers, shard_of=shard_of,
         cross_fraction=cross_fraction if num_shards > 1 else 0.0,
-        interconnect_latency=interconnect_latency, seed=seed,
+        interconnect_latency=interconnect_latency,
+        interconnect_mode=interconnect_mode, seed=seed,
         tracer=tracer)
 
 

@@ -11,6 +11,12 @@ from .shardlib import (  # noqa: F401
     shard,
     use_mesh,
 )
+from .fabric import (  # noqa: F401
+    AsyncFabric,
+    FabricLink,
+    FabricTicket,
+    RebalancePlanner,
+)
 from .sharded_runtime import (  # noqa: F401
     MigrationStats,
     PageOwnerMap,

@@ -48,9 +48,18 @@ from repro.obs.counters import PerfCounters, namespaced
 from repro.obs.metrics import Histogram
 from repro.obs.trace import Tracer, monotonic
 from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
-from repro.runtime.submit import SubmitRequest, Ticket, warn_legacy_submit
+from repro.runtime.submit import SubmitRequest, Ticket, reject_legacy_submit
 
 from . import shardlib
+from .fabric import (
+    COMPLETED,
+    EGRESS,
+    IN_FLIGHT,
+    INGRESS,
+    AsyncFabric,
+    FabricTicket,
+    RebalancePlanner,
+)
 
 
 def resolve_num_shards(mesh=None) -> int:
@@ -110,12 +119,25 @@ class MigrationStats:
     chain_in: int = 0           # descriptors before the coalescer
     chain_out: int = 0          # descriptors after merge (real submissions)
     hop_completions: int = 0    # per-hop §II-D writebacks observed
+    fabric_inflight_rounds: int = 0  # pump rounds with a hop on the wire
+    fabric_hidden_rounds: int = 0    # ... during which a shard drained
 
     @property
     def merge_ratio(self) -> float:
         """chain_in / chain_out — the §II-C payoff of run-preserving
         migration plans (>1 means contiguous page runs were fused)."""
         return self.chain_in / max(self.chain_out, 1)
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of fabric in-flight rounds hidden behind local drain
+        progress (async fabric only; 0.0 when nothing crossed the wire).
+
+        Accounted globally by the pump loop — only the mesh-wide
+        ``ShardedDMARuntime.migration`` aggregate carries these rounds;
+        per-plan stats report their own hops/chains but leave the fabric
+        round fields at zero (a round is not attributable to one plan)."""
+        return self.fabric_hidden_rounds / max(self.fabric_inflight_rounds, 1)
 
     def merge(self, other: "MigrationStats") -> None:
         for f in dataclasses.fields(self):
@@ -148,7 +170,13 @@ class ShardedDMARuntime:
         backpressure: str = "block",
         speculation=None,
         translation: bool = True,
+        fabric: str = "async",
+        fabric_latency: int = 1,
+        fabric_page_beats: int = 1,
     ):
+        if fabric not in ("async", "sync"):
+            raise ValueError(f"fabric must be 'async' or 'sync', "
+                             f"got {fabric!r}")
         explicit_mesh = mesh is not None
         mesh = mesh if explicit_mesh else shardlib.current_mesh()
         mesh_shards = resolve_num_shards(mesh)
@@ -192,6 +220,15 @@ class ShardedDMARuntime:
         self.tracer: Optional[Tracer] = None
         self._trace_args: Dict[str, object] = {}
         self._hop_seq = 0    # sampling key for hop spans (deterministic)
+        # -- async fabric state (DESIGN.md §10) --
+        self.fabric_mode = fabric
+        self.fabric = (AsyncFabric(latency=fabric_latency,
+                                   page_beats=fabric_page_beats)
+                       if fabric == "async" else None)
+        self._pending_hops: List[FabricTicket] = []
+        # Elastic mesh membership: resize flips these, ownership does not
+        # move — an inactive shard's pages are evacuated, not re-owned.
+        self.active: List[bool] = [True] * num_shards
 
     # -- instrumentation -----------------------------------------------------
     def attach_probe(self, probe: Optional[PerfProbe]) -> None:
@@ -252,10 +289,11 @@ class ShardedDMARuntime:
         ``array`` has ``owner.num_pages * row_elems`` elements; shard ``s``
         receives the slice covering its pages, device-placed when meshed.
         """
-        if name == self.STAGE_POOL:
+        if name == self.STAGE_POOL or \
+                name.startswith(self.STAGE_POOL + "."):
             raise ValueError(
-                f"pool name {self.STAGE_POOL!r} is reserved for the "
-                "migration planner's staging buffer")
+                f"pool name {name!r} is reserved for the migration "
+                "planner's staging buffers")
         array = jnp.asarray(array)
         if array.ndim != 1 or array.shape[0] != owner.num_pages * row_elems:
             raise ValueError(
@@ -289,6 +327,7 @@ class ShardedDMARuntime:
         dst_pages: Sequence[int],
         *,
         drain: bool = True,
+        priority: int = 0,
     ) -> MigrationStats:
         """Lower page moves into descriptor chains across the mesh.
 
@@ -298,6 +337,19 @@ class ShardedDMARuntime:
         egress gather chain -> fabric -> ingress scatter chain, with the
         hop's completion control descriptor written back (§II-D) on the
         destination shard only after the ingress chain drained.
+
+        Under the async fabric (the default), hops are non-blocking
+        :class:`repro.distributed.fabric.FabricTicket` objects: the
+        local-gather half issues immediately and the remote-scatter half
+        completes when the fabric delivers, with shard drains overlapping
+        in-flight hops via :meth:`pump`. ``drain=True`` pumps the plan to
+        completion before returning; ``drain=False`` leaves the tickets
+        outstanding for the caller to :meth:`pump` (hop_completions then
+        lands on both the returned stats and the mesh aggregate as hops
+        retire). ``priority`` rides the channels' weighted arbitration —
+        the rebalancer submits at 0 so it never preempts serve traffic.
+        The synchronous fabric (``fabric="sync"``) ignores ``priority``
+        and executes hops exactly as PR 8 did.
         """
         if len(src_pages) != len(dst_pages):
             raise ValueError("src/dst page lists must pair up")
@@ -339,19 +391,39 @@ class ShardedDMARuntime:
             groups.setdefault((int(s_owner[k]), int(d_owner[k])),
                               []).append(k)
 
+        sync = self.fabric_mode == "sync"
         for (ss, ds), idx in sorted(groups.items()):
             rows_s = src_local[idx]
             rows_d = dst_local[idx]
             if ss == ds:
                 stats.local_pages += len(idx)
-                self._submit_local(pool_names, ss, rows_s, rows_d, stats)
+                if sync:
+                    self._submit_local(pool_names, ss, rows_s, rows_d,
+                                       stats)
+                else:
+                    self._submit_local_async(pool_names, ss, rows_s,
+                                             rows_d, stats, priority)
             else:
                 stats.cross_pages += len(idx)
                 stats.hops += 1
-                self._submit_hop(pool_names, ss, ds, rows_s, rows_d, stats)
+                if sync:
+                    self._submit_hop(pool_names, ss, ds, rows_s, rows_d,
+                                     stats)
+                else:
+                    self._begin_hop(pool_names, ss, ds, rows_s, rows_d,
+                                    stats, priority)
+        if not sync and drain:
+            self.pump_until_idle()
         if drain:
             self.drain_until_idle()
         self.migration.merge(stats)
+        if not sync:
+            # Hops left outstanding (drain=False) retire later inside
+            # pump(); their writeback counts must land on the mesh
+            # aggregate too, so mark this plan's stats as already merged.
+            for t in self._pending_hops:
+                if t.stats is stats:
+                    t.merged = True
         return stats
 
     def _chain(self, rows_s: np.ndarray, rows_d: np.ndarray,
@@ -454,13 +526,269 @@ class ShardedDMARuntime:
         src_rt.pools.pop(self.STAGE_POOL, None)
         dst_rt.pools.pop(self.STAGE_POOL, None)
 
+    # -- async fabric (DESIGN.md §10) ----------------------------------------
+    def _stage_name(self, hop_id: int, pool: str) -> str:
+        """Per-(hop, pool) staging buffer name: concurrent in-flight hops
+        on one shard must not clobber each other's send windows."""
+        return f"{self.STAGE_POOL}.{hop_id}.{pool}"
+
+    def _submit_local_async(self, pool_names, shard, rows_s, rows_d,
+                            stats, priority):
+        # Same chains as the sync path, but no drain here: local batches
+        # drain inside pump() rounds, overlapping with in-flight hops.
+        rt = self.shards[shard]
+        for name in pool_names:
+            d = self._chain(rows_s, rows_d, self._row_elems[name])
+            res = rt.submit(SubmitRequest(
+                chain=d, src_pool=name, dst_pool=name, tier="serial",
+                priority=priority))
+            if res.coalesce is not None:
+                stats.chain_in += res.coalesce.n_in
+                stats.chain_out += res.coalesce.n_out
+
+    def _begin_hop(self, pool_names, src_shard, dst_shard, rows_s, rows_d,
+                   stats, priority) -> FabricTicket:
+        """Issue the local-gather half of a hop and ticket the rest.
+
+        The egress gather chains go onto the source shard's serial
+        channels *without* draining; the control descriptor is posted on
+        the destination up front (its §II-D writeback still only fires
+        at :meth:`_finish_hop`, after every ingress chain drained)."""
+        src_rt = self.shards[src_shard]
+        dst_rt = self.shards[dst_shard]
+        n = len(rows_s)
+        ctrl = dst_rt.submit_control(payload=src_shard,
+                                     channel="completion")
+        tr = self.tracer
+        self._hop_seq += 1
+        rec = tr is not None and tr.sampled(("hop", self._hop_seq))
+        t = FabricTicket(
+            hop_id=self._hop_seq, src_shard=src_shard, dst_shard=dst_shard,
+            pages=n, pool_names=tuple(pool_names),
+            rows_s=np.asarray(rows_s, np.int64),
+            rows_d=np.asarray(rows_d, np.int64),
+            ctrl_ticket=ctrl.tickets[-1], stats=stats, priority=priority,
+            issued_round=self.fabric.now, rec=rec,
+            flow_id=tr.next_flow_id() if rec else 0,
+            trace_args=(dict(self._trace_args, src_shard=src_shard,
+                             dst_shard=dst_shard, pages=n) if rec else {}),
+            t0=monotonic() if rec else 0.0)
+        stage_rows = np.arange(n, dtype=np.int64)
+        for name in pool_names:
+            row_elems = self._row_elems[name]
+            stage = self._stage_name(t.hop_id, name)
+            src_rt.register_pool(stage, self._place(
+                src_shard, self._pad(jnp.zeros(
+                    n * row_elems, src_rt.pool(name).dtype))))
+            d_out = self._chain(rows_s, stage_rows, row_elems)
+            res = src_rt.submit(SubmitRequest(
+                chain=d_out, src_pool=name, dst_pool=stage, tier="serial",
+                priority=priority))
+            if res.coalesce is not None:
+                stats.chain_in += res.coalesce.n_in
+                stats.chain_out += res.coalesce.n_out
+            t.egress.append((name, res.channel, frozenset(res.tickets)))
+        self._pending_hops.append(t)
+        return t
+
+    @staticmethod
+    def _chains_pending(rt: DMARuntime, entries) -> bool:
+        """Whether any of a hop's submitted chains still await drain.
+
+        A data chain is done exactly when none of its tickets sit in a
+        pending ring batch (or the spill queue) any more — ``drain_one``
+        marks the slots done and retires them in the same step, so batch
+        membership is the drain-state signal. The completion queue is
+        deliberately *not* polled: its events belong to the serve
+        scheduler (see the sync hop's writeback comment)."""
+        for _, channel, tset in entries:
+            for b in rt.channels[channel].pending:
+                if tset.intersection(b.tickets):
+                    return True
+        for sp in rt._spill:
+            for _, _, tset in entries:
+                if tset.intersection(sp.tickets):
+                    return True
+        return False
+
+    def _hop_stat(self, t: FabricTicket, **deltas) -> None:
+        """Bump a hop's plan stats; mirror onto the mesh aggregate when
+        the plan was already merged (drain=False plans retire late)."""
+        for k, v in deltas.items():
+            setattr(t.stats, k, getattr(t.stats, k) + v)
+            if t.merged:
+                setattr(self.migration, k, getattr(self.migration, k) + v)
+
+    def _send_hop(self, t: FabricTicket) -> None:
+        """Egress drained: capture the staging buffers onto the
+        destination device and put the payload on the fabric link."""
+        src_rt = self.shards[t.src_shard]
+        tr = self.tracer
+        if t.rec:
+            t.t1 = monotonic()
+            track = f"shard{t.src_shard}/migrate"
+            tr.complete("migrate.egress", track, t.t0 * 1e6,
+                        (t.t1 - t.t0) * 1e6, **t.trace_args)
+            tr.flow_start("hop", track, t.flow_id, ts=t.t1 * 1e6 - 1e-3)
+        for name in t.pool_names:
+            stage = self._stage_name(t.hop_id, name)
+            t.staged[name] = self._place(t.dst_shard, src_rt.pool(stage))
+            src_rt.pools.pop(stage, None)
+        self.fabric.send(t)
+        if t.rec:
+            ln = self.fabric.link(t.src_shard, t.dst_shard)
+            tr.counter(f"fabric.link{t.src_shard}-{t.dst_shard}", "fabric",
+                       occupancy_rounds=max(0, ln.busy_until -
+                                            self.fabric.now),
+                       pages_in_flight=t.pages)
+
+    def _submit_ingress(self, t: FabricTicket) -> None:
+        """Fabric delivered: issue the remote-scatter half on the
+        destination shard (completes via the §II-D writeback)."""
+        dst_rt = self.shards[t.dst_shard]
+        tr = self.tracer
+        if t.rec:
+            t.t2 = monotonic()
+            tr.complete("migrate.fabric", "fabric", t.t1 * 1e6,
+                        (t.t2 - t.t1) * 1e6, sent_round=t.sent_round,
+                        deliver_round=t.deliver_round, **t.trace_args)
+            tr.flow_step("hop", "fabric", t.flow_id, ts=t.t2 * 1e6 - 1e-3)
+            ln = self.fabric.link(t.src_shard, t.dst_shard)
+            tr.counter(f"fabric.link{t.src_shard}-{t.dst_shard}", "fabric",
+                       occupancy_rounds=max(0, ln.busy_until -
+                                            self.fabric.now),
+                       pages_in_flight=0)
+        stage_rows = np.arange(t.pages, dtype=np.int64)
+        for name in t.pool_names:
+            stage = self._stage_name(t.hop_id, name)
+            dst_rt.register_pool(stage, t.staged.pop(name))
+            d_in = self._chain(stage_rows, t.rows_d,
+                               self._row_elems[name])
+            res = dst_rt.submit(SubmitRequest(
+                chain=d_in, src_pool=stage, dst_pool=name, tier="serial",
+                priority=t.priority))
+            if res.coalesce is not None:
+                self._hop_stat(t, chain_in=res.coalesce.n_in,
+                               chain_out=res.coalesce.n_out)
+            t.ingress.append((name, res.channel, frozenset(res.tickets)))
+
+    def _finish_hop(self, t: FabricTicket) -> None:
+        """Ingress drained: observe the hop's §II-D writeback and drop
+        the staging pools (non-destructive ring scan, never a queue
+        poll — the completion queue belongs to the serve scheduler)."""
+        dst_rt = self.shards[t.dst_shard]
+        dst_rt.complete(t.ctrl_ticket)
+        ring = dst_rt.channels["completion"].ring
+        self._hop_stat(t, hop_completions=int(
+            t.ctrl_ticket in ring.live_done_tickets()))
+        for name in t.pool_names:
+            dst_rt.pools.pop(self._stage_name(t.hop_id, name), None)
+        t.state = COMPLETED
+        t.completed_round = self.fabric.now
+        if t.rec:
+            t3 = monotonic()
+            track = f"shard{t.dst_shard}/migrate"
+            self.tracer.complete("migrate.ingress", track, t.t2 * 1e6,
+                                 (t3 - t.t2) * 1e6, **t.trace_args)
+            self.tracer.flow_end("hop", track, t.flow_id,
+                                 ts=t3 * 1e6 - 1e-3)
+
+    def _pump_round(self) -> int:
+        """One fabric round: drain every active shard once, tick the
+        clock, then move tickets through their lifecycle edges."""
+        fab = self.fabric
+        progress = 0
+        for s, rt in enumerate(self.shards):
+            if self.active[s]:
+                progress += rt.drain_all()
+        fab.advance()
+        # Higher-priority tickets claim link slots first each round, so a
+        # background handoff (priority 0) queued behind foreground serve
+        # migration (priority 1) cannot capture a link ahead of it.
+        ready = [t for t in self._pending_hops
+                 if t.state == EGRESS and not self._chains_pending(
+                     self.shards[t.src_shard], t.egress)]
+        for t in sorted(ready, key=lambda t: (-t.priority, t.hop_id)):
+            self._send_hop(t)
+        for t in fab.deliveries():
+            self._submit_ingress(t)
+        finished = False
+        for t in self._pending_hops:
+            if t.state == INGRESS and not self._chains_pending(
+                    self.shards[t.dst_shard], t.ingress):
+                self._finish_hop(t)
+                finished = True
+        if finished:
+            self._pending_hops = [t for t in self._pending_hops
+                                  if t.state != COMPLETED]
+        # Overlap accounting: a round counts as in-flight when a payload
+        # is on the wire, and as hidden when local drains made progress
+        # under it. Global only — rounds are mesh-wide, not per-plan.
+        if fab.in_flight:
+            self.migration.fabric_inflight_rounds += 1
+            if progress:
+                self.migration.fabric_hidden_rounds += 1
+            for t in fab.in_flight:
+                t.inflight_rounds += 1
+                if progress:
+                    t.hidden_rounds += 1
+        return progress
+
+    def fabric_outstanding(self) -> int:
+        """Hops ticketed but not yet completed (async fabric)."""
+        return len(self._pending_hops)
+
+    def plan_outstanding(self, stats: MigrationStats) -> int:
+        """Hops of one ``migrate_rows`` plan still on the fabric — lets a
+        caller pump a foreground plan to completion while background
+        traffic (rebalance, resize handoff) keeps flowing."""
+        return sum(1 for t in self._pending_hops if t.stats is stats)
+
+    def pump(self, rounds: int = 1) -> int:
+        """Advance the async fabric by up to ``rounds`` rounds; returns
+        batches drained. Stops early once no hop is outstanding."""
+        if self.fabric_mode != "async":
+            raise RuntimeError("pump() requires fabric='async'")
+        drained = 0
+        for _ in range(rounds):
+            if not self._pending_hops:
+                break
+            drained += self._pump_round()
+        return drained
+
+    def pump_until_idle(self, max_rounds: int = 65536) -> None:
+        """Run the pump until every outstanding hop completed."""
+        if self.fabric_mode != "async":
+            return
+        for _ in range(max_rounds):
+            if not self._pending_hops:
+                return
+            self._pump_round()
+        raise RuntimeError(
+            f"async fabric did not quiesce in {max_rounds} rounds "
+            f"({len(self._pending_hops)} hops outstanding)")
+
+    # -- elastic mesh membership ---------------------------------------------
+    def set_active(self, shard: int, active: bool = True) -> None:
+        """Flip a shard's mesh membership (resize). Ownership is static;
+        an inactive shard's pages must have been evacuated first
+        (``ShardedKVPool.evacuate`` / ``fault.ungraceful_resize``)."""
+        self.active[shard] = bool(active)
+
+    def active_shards(self) -> List[int]:
+        return [s for s in range(self.num_shards) if self.active[s]]
+
     # -- drain / stats -------------------------------------------------------
     def drain_all(self) -> int:
-        return sum(rt.drain_all() for rt in self.shards)
+        return sum(rt.drain_all()
+                   for s, rt in enumerate(self.shards) if self.active[s])
 
     def drain_until_idle(self, max_rounds: int = 1024) -> None:
-        for rt in self.shards:
-            rt.drain_until_idle(max_rounds)
+        if self._pending_hops:
+            self.pump_until_idle()
+        for s, rt in enumerate(self.shards):
+            if self.active[s]:
+                rt.drain_until_idle(max_rounds)
 
     def _translation_stats_raw(self) -> Dict[str, object]:
         """Bare-key mesh aggregate (summed over shards' raw blocks)."""
@@ -473,13 +801,22 @@ class ShardedDMARuntime:
         return namespaced(self._translation_stats_raw(), "translation")
 
     def stats(self) -> Dict[str, object]:
-        return {
+        out = {
             "num_shards": self.num_shards,
+            "active_shards": self.active_shards(),
             "migration": dataclasses.asdict(self.migration),
             "migration_chain_merge_ratio": self.migration.merge_ratio,
+            "migration_overlap_ratio": self.migration.overlap_ratio,
             "translation_cache": self.translation_stats(),
             "shards": [rt.stats() for rt in self.shards],
         }
+        if self.fabric is not None:
+            out["fabric"] = {
+                "rounds": self.fabric.now,
+                "outstanding_hops": len(self._pending_hops),
+                "links": self.fabric.link_stats(),
+            }
+        return out
 
 
 class ShardedKVPool:
@@ -518,6 +855,9 @@ class ShardedKVPool:
     def alloc_on(self, shard: int, n: int) -> List[int]:
         """Lowest-id free pages owned by ``shard`` (sequential preference:
         consecutive ids keep the §II-C speculator hitting)."""
+        if not self.rt.active[shard]:
+            raise RuntimeError(
+                f"shard {shard} left the mesh; its pages are evacuated")
         free = self._free[shard]
         if n > len(free):
             raise RuntimeError(
@@ -560,11 +900,49 @@ class ShardedKVPool:
 
     # -- runtime-mediated movement (DESIGN.md §6) ----------------------------
     def move_pages(self, src_pages: Sequence[int],
-                   dst_pages: Sequence[int]) -> MigrationStats:
+                   dst_pages: Sequence[int], *,
+                   priority: int = 0,
+                   drain: bool = True) -> MigrationStats:
         """Relocate page contents through the sharded runtime: local moves
         stay on the owner's channels, cross-owner moves become hops."""
         return self.rt.migrate_rows(
-            (self.POOL_K, self.POOL_V), src_pages, dst_pages)
+            (self.POOL_K, self.POOL_V), src_pages, dst_pages,
+            priority=priority, drain=drain)
+
+    # -- elastic mesh resize (DESIGN.md §10) ---------------------------------
+    def evacuate(self, shard: int, *, planner=None, priority: int = 0,
+                 exclude: Sequence[int] = ()) -> Dict[int, int]:
+        """Graceful leave: hand the shard's live pages to survivors.
+
+        The handoff lowers through :meth:`RebalancePlanner.placement`
+        (free-capacity-weighted spread over the surviving shards) and
+        rides the normal migration path at the given priority; the shard
+        then goes inactive and its free list empties. Returns the
+        ``{old_page: new_page}`` remap — the caller owns rewriting any
+        references (serve request page lists) to the vacated pages.
+        """
+        srt = self.rt
+        survivors = [s for s in srt.active_shards() if s != shard]
+        if not survivors:
+            raise RuntimeError("cannot evacuate the last active shard")
+        banned = set(int(p) for p in exclude)
+        live = sorted(set(self.owner.shard_pages(shard))
+                      - set(self._free[shard]) - banned)
+        if planner is None:
+            planner = RebalancePlanner(srt.num_shards)
+        new = planner.placement(self, live, survivors)
+        if live:
+            srt.migrate_rows((self.POOL_K, self.POOL_V), live, new,
+                             priority=priority)
+        self._free[shard] = []
+        srt.set_active(shard, False)
+        return dict(zip(live, new))
+
+    def readmit(self, shard: int) -> None:
+        """Rejoin after a leave: the shard comes back empty — evacuation
+        moved every live page off, so its whole owned block is free."""
+        self.rt.set_active(shard, True)
+        self._free[shard] = sorted(self.owner.shard_pages(shard))
 
     def defragment(self, pages: Sequence[int]) -> Tuple[List[int],
                                                         MigrationStats,
@@ -645,18 +1023,17 @@ class ShardedServeEngine:
         Unified form: a :class:`~repro.runtime.SubmitRequest` whose
         ``request`` field is the serve ``Request``; returns a
         :class:`~repro.runtime.Ticket` with ``shard`` and ``uid`` set.
-        The legacy positional-``Request`` form still works for one
-        release but warns and keeps returning the shard index (int).
-        Remote pages are migrated into the owner first either way.
+        The legacy positional-``Request`` form was removed one release
+        after 0.4 and raises ``TypeError``. Remote pages are migrated
+        into the owner first.
         """
-        if isinstance(req, SubmitRequest):
-            if req.request is None:
-                raise ValueError(
-                    "ShardedServeEngine.submit needs SubmitRequest.request "
-                    "set to a serve Request")
-            return self._admit(req.request, on_complete=req.on_complete)
-        warn_legacy_submit("ShardedServeEngine.submit")
-        return self._admit(req).shard
+        if not isinstance(req, SubmitRequest):
+            reject_legacy_submit("ShardedServeEngine.submit", req)
+        if req.request is None:
+            raise ValueError(
+                "ShardedServeEngine.submit needs SubmitRequest.request "
+                "set to a serve Request")
+        return self._admit(req.request, on_complete=req.on_complete)
 
     def _admit(self, req, on_complete=None) -> Ticket:
         kv_pages = list(getattr(req, "kv_pages", None) or [])
@@ -762,9 +1139,9 @@ class ShardedServeEngine:
         """Mesh counters under the unified ``sharded.*`` namespace.
 
         Canonical keys are ``sharded.<field>`` plus a nested
-        ``translation`` block; old bare keys and ``translation_cache``
-        read through deprecated aliases (DESIGN.md §9). Per-shard blocks
-        under ``sharded.per_shard`` are ``serve.*``-namespaced.
+        ``translation`` block; the old bare-key aliases were removed one
+        release after 0.4 (DESIGN.md §9). Per-shard blocks under
+        ``sharded.per_shard`` are ``serve.*``-namespaced.
         """
         per = [eng.perf_counters() for eng in self.engines]
         latency = self.request_latency_histogram()
@@ -788,5 +1165,4 @@ class ShardedServeEngine:
         # in per_shard; this is their sum (DESIGN.md §7).
         return namespaced(
             raw, "sharded",
-            extra={"translation": self.rt.translation_stats()},
-            extra_aliases={"translation_cache": "translation"})
+            extra={"translation": self.rt.translation_stats()})

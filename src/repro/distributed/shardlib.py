@@ -60,14 +60,18 @@ def use_mesh(mesh: Optional[Mesh],
     """Scoped mesh+rules install; restores the previous pair on exit.
 
     The exception-safe form of the set/clear pair: state never leaks out
-    of the ``with`` block, even when the body throws mid-launch.
+    of the ``with`` block — even when the *install itself* throws (a bad
+    rule table must not leave the new mesh half-installed), and even when
+    the body resizes or tears down the mesh before raising (elastic
+    resize: the body may legitimately ``set_mesh`` a grown/shrunk mesh;
+    on error the pre-``with`` pair still comes back).
     """
     prev_mesh = current_mesh()
     prev_rules = dict(current_rules())
-    set_mesh(mesh)
-    if rules is not None:
-        set_rules(rules)
     try:
+        set_mesh(mesh)
+        if rules is not None:
+            set_rules(rules)
         yield mesh
     finally:
         set_mesh(prev_mesh)

@@ -18,12 +18,10 @@ share one documented namespace:
 * ``channels.*``     — per-channel probe snapshots
   (``channels.<name>.<field>``).
 
-:class:`PerfCounters` is a plain ``dict`` whose *stored* keys are the
-canonical ones (so ``json.dumps`` and iteration see only the new
-namespace) plus an alias table: reading an old key through ``[]`` or
-``.get`` still works for one release but emits a
-:class:`DeprecationWarning`. ``in`` stays silent so feature probes don't
-spam.
+:class:`PerfCounters` is a plain ``dict`` whose keys are the canonical
+dotted ones. The bare-key DeprecationWarning aliases shipped for one
+release after 0.4 and are now removed: reading an old bare key is a
+plain ``KeyError``, exactly like any other missing key.
 
 Internal producers (``TranslationCache.stats()``, ``aggregate_stats``)
 keep returning *raw* bare-key dicts; wrapping happens once, at each
@@ -31,62 +29,24 @@ public surface, via :func:`namespaced`.
 """
 from __future__ import annotations
 
-import warnings
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Mapping, Optional
 
 
 class PerfCounters(dict):
-    """Canonical-key counter dict with deprecated-alias reads."""
+    """Canonical-key counter dict (dotted unified namespace)."""
 
-    def __init__(self, data: Optional[Mapping[str, Any]] = None,
-                 aliases: Optional[Mapping[str, str]] = None):
+    def __init__(self, data: Optional[Mapping[str, Any]] = None):
         super().__init__(data or {})
-        self._aliases: Dict[str, str] = dict(aliases or {})
-
-    def _resolve(self, key: str, warn: bool = True) -> str:
-        canonical = self._aliases.get(key)
-        if canonical is None or dict.__contains__(self, key):
-            return key
-        if warn:
-            warnings.warn(
-                f"perf counter key {key!r} is deprecated; read "
-                f"{canonical!r} (unified namespace, DESIGN.md §9). The "
-                "alias is removed one release after 0.4.",
-                DeprecationWarning, stacklevel=3)
-        return canonical
-
-    def __getitem__(self, key):
-        return dict.__getitem__(self, self._resolve(key))
-
-    def get(self, key, default=None):
-        k = self._resolve(key)
-        return dict.__getitem__(self, k) if dict.__contains__(self, k) \
-            else default
-
-    def __contains__(self, key):
-        return (dict.__contains__(self, key)
-                or self._resolve(key, warn=False) != key)
-
-    @property
-    def aliases(self) -> Dict[str, str]:
-        return dict(self._aliases)
 
 
 def namespaced(raw: Mapping[str, Any], prefix: str, *,
-               extra: Optional[Mapping[str, Any]] = None,
-               extra_aliases: Optional[Mapping[str, str]] = None
-               ) -> PerfCounters:
+               extra: Optional[Mapping[str, Any]] = None) -> PerfCounters:
     """Wrap a raw bare-key block as ``{prefix}.{key}`` canonical keys.
 
-    Every bare key becomes a deprecated alias for its dotted form;
     ``extra`` entries are stored verbatim (already-canonical keys such
-    as a nested ``translation`` block) and ``extra_aliases`` adds
-    old-name → canonical-name mappings beyond the mechanical ones.
+    as a nested ``translation`` block).
     """
     data = {f"{prefix}.{k}": v for k, v in raw.items()}
-    aliases = {k: f"{prefix}.{k}" for k in raw}
     if extra:
         data.update(extra)
-    if extra_aliases:
-        aliases.update(extra_aliases)
-    return PerfCounters(data, aliases=aliases)
+    return PerfCounters(data)

@@ -44,7 +44,7 @@ class TraceEvent:
     """One trace_event-shaped record (pre-export, track not yet a pid)."""
 
     name: str
-    ph: str                       # X, i, b, e, s, t, f
+    ph: str                       # X, i, b, e, s, t, f, C
     ts: float                     # µs (wall) or cycles (clock="cycle")
     track: str                    # exported as one Perfetto process/track
     dur: Optional[float] = None   # X only
@@ -111,6 +111,16 @@ class Tracer:
             ts = self.now_us()
         self.emit(TraceEvent(name=name, ph="i", ts=ts, track=track,
                              clock=clock, args=args))
+
+    def counter(self, name: str, track: str, ts: Optional[float] = None,
+                *, clock: str = "wall", **values) -> None:
+        """A counter sample ("C"): Perfetto renders each numeric value in
+        ``values`` as a series on the named counter track (per-link
+        fabric occupancy uses one counter per directed link)."""
+        if ts is None:
+            ts = self.now_us()
+        self.emit(TraceEvent(name=name, ph="C", ts=ts, track=track,
+                             clock=clock, args=values))
 
     def async_begin(self, name: str, track: str, id: int,
                     ts: Optional[float] = None, **args) -> None:

@@ -66,6 +66,16 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
     "cross_shard_migration_cycles": 0.05,
     "per_shard_bus_utilization": 0.03,
     "migration_chain_merge_ratio": 0.03,
+    # Async-fabric sharded metrics (schema v7, DESIGN.md §10). Overlap and
+    # resize retention are logical-round ratios from the deterministic
+    # fabric clock (exact on an unchanged tree); the stall p99 rides the
+    # contended per-link interconnect model, so it gets the same queueing
+    # band as the migration-cycle mean. Convergence steps are a small
+    # integer, so the band only absorbs intentional planner re-tuning.
+    "migration_overlap_ratio": 0.03,
+    "p99_migration_stall_cycles": 0.05,
+    "rebalance_convergence_steps": 0.10,
+    "throughput_retained_during_resize": 0.03,
     # Chain-lowering translation cache (DESIGN.md §7). Steady-state hit
     # rate is a counter-delta ratio (deterministic on an unchanged tree);
     # launch speedup comes from the cycle model, also deterministic.
@@ -113,6 +123,10 @@ METRIC_POLARITY: Dict[str, int] = {
     "cross_shard_migration_cycles": -1,
     "per_shard_bus_utilization": +1,
     "migration_chain_merge_ratio": +1,
+    "migration_overlap_ratio": +1,
+    "p99_migration_stall_cycles": -1,
+    "rebalance_convergence_steps": -1,
+    "throughput_retained_during_resize": +1,
     "translation_cache_hit_rate": +1,
     "translation_launch_speedup": +1,
     "request_latency_steps_p50": -1,
@@ -362,13 +376,19 @@ def sharded_summary(doc: Dict[str, object]) -> str:
         return "sharded: no mesh cells in this document"
     lines = ["sharded: cross-shard migration by mesh size",
              f"  {'mesh':>4}  {'migration_cycles':>16}  "
-             f"{'per_shard_util':>14}  {'merge_ratio':>11}"]
+             f"{'per_shard_util':>14}  {'merge_ratio':>11}  "
+             f"{'overlap':>7}  {'stall_p99':>9}  {'rebal':>5}  "
+             f"{'retained':>8}"]
     for mesh, m in rows:
         lines.append(
             f"  {mesh:>4}  "
             f"{m.get('cross_shard_migration_cycles', float('nan')):>16.1f}  "
             f"{m.get('per_shard_bus_utilization', float('nan')):>14.3f}  "
-            f"{m.get('migration_chain_merge_ratio', float('nan')):>11.2f}")
+            f"{m.get('migration_chain_merge_ratio', float('nan')):>11.2f}  "
+            f"{m.get('migration_overlap_ratio', float('nan')):>7.2f}  "
+            f"{m.get('p99_migration_stall_cycles', float('nan')):>9.1f}  "
+            f"{m.get('rebalance_convergence_steps', float('nan')):>5.0f}  "
+            f"{m.get('throughput_retained_during_resize', float('nan')):>8.2f}")
     return "\n".join(lines)
 
 

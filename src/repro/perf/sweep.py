@@ -76,6 +76,15 @@ from .transform_cell import (
 )
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
+#: v7: async-fabric sharded cells (DESIGN.md §10) — the sharded cells
+#: regenerate on Zipf-skewed page traffic through the async fabric and
+#: gain four gated metrics: ``migration_overlap_ratio`` (in-flight
+#: rounds hidden behind local drains, >= 0.6 at mesh 4),
+#: ``p99_migration_stall_cycles`` (contended per-link interconnect mode,
+#: strictly below the shared-bus synchronous baseline stored in the
+#: counters), ``rebalance_convergence_steps`` (hot-shard planner
+#: hysteresis), and ``throughput_retained_during_resize`` (>= 0.8 at
+#: mesh 4); the cell records its fabric mode.
 #: v6: in-flight transform cells (kind: "transform", DESIGN.md §9) —
 #: effective-bandwidth A/B of the EF-int8 quantize transform vs the fp32
 #: baseline at equal logical payload, roundtrip fidelity, and the
@@ -94,7 +103,7 @@ from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 #: surface (DESIGN.md §6). v2 added the speculation-policy metrics
 #: (spec_bus_utilization_*) on every DMA cell plus the end-to-end serve
 #: cell. Older baselines must be regenerated.
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 #: The gated perf surface of DMA cells. gate.py refuses documents missing
 #: any of these (serve cells gate SERVE_GATED_METRICS instead).

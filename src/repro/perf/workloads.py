@@ -234,6 +234,33 @@ def _defrag_churn(cfg: ModelConfig, scale: Scale,
     return chains, _transfer_bytes(p.page_elems)
 
 
+def zipf_page_traffic(num_pages: int, n_touches: int, *,
+                      alpha: float = 1.1,
+                      rng: np.random.Generator,
+                      hot_pages: np.ndarray = None) -> np.ndarray:
+    """Bounded rank-based Zipf page-reference stream.
+
+    Rank ``r`` (1-based) is touched with probability proportional to
+    ``r ** -alpha``; ranks map onto page ids through ``hot_pages`` when
+    given (rank 1 == ``hot_pages[0]``) or through a seeded permutation of
+    the page space otherwise.  Unlike ``numpy``'s unbounded Zipf sampler
+    every draw is a valid page id, so the stream can drive the sharded
+    migration cells directly.  Pure function of ``(args, rng state)``.
+    """
+    if num_pages < 1:
+        raise ValueError("num_pages must be >= 1")
+    if alpha <= 0:
+        raise ValueError("alpha must be > 0")
+    weights = 1.0 / np.arange(1, num_pages + 1, dtype=np.float64) ** alpha
+    weights /= weights.sum()
+    page_of_rank = (np.asarray(hot_pages, np.int64) if hot_pages is not None
+                    else rng.permutation(num_pages).astype(np.int64))
+    if len(page_of_rank) != num_pages:
+        raise ValueError("hot_pages must cover the whole page space")
+    ranks = rng.choice(num_pages, size=n_touches, p=weights)
+    return page_of_rank[ranks]
+
+
 _GENERATORS = {
     "paged_kv": _paged_kv,
     "moe_dispatch": _moe_dispatch,

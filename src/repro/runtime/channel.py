@@ -52,7 +52,7 @@ from repro.obs.trace import Tracer, monotonic
 from .completion import CompletionQueue
 from .instrumentation import PerfProbe
 from .ring import RingFull, SubmissionRing
-from .submit import SubmitRequest, Ticket, warn_legacy_submit
+from .submit import SubmitRequest, Ticket, reject_legacy_submit
 
 TIERS = ("serial", "blocked", "blocked_2d", "control")
 
@@ -151,29 +151,24 @@ class Channel:
         d,
         tickets: Sequence[int],
         *,
-        src_pool: Optional[str] = None,
-        dst_pool: Optional[str] = None,
         lowered: Optional[object] = None,
-    ):
+    ) -> Ticket:
         """Push one chain into the ring; raises RingFull under backpressure.
 
         Unified form (DESIGN.md §9): ``submit(SubmitRequest, tickets,
         lowered=...) -> Ticket``. ``tickets`` and ``lowered`` stay
         call-level operands (the scheduler allocates tickets and holds
-        the compiled artifact). The legacy keyword form
-        ``submit(chain, tickets, src_pool=..., dst_pool=...)`` still
-        works for one release, returns the bare slot list, and emits a
-        DeprecationWarning.
+        the compiled artifact). The legacy keyword form was removed one
+        release after 0.4; a bare chain raises ``TypeError``.
         """
-        if isinstance(d, SubmitRequest):
-            spec = as_transform(d.transform)
-            slots = self._push(d.chain, tickets, d.src_pool, d.dst_pool,
-                               lowered, spec)
-            return Ticket(tickets=list(map(int, tickets)),
-                          channel=self.name, spilled=False,
-                          slots=slots, transform=spec.cache_token)
-        warn_legacy_submit("Channel.submit")
-        return self._push(d, tickets, src_pool, dst_pool, lowered, None)
+        if not isinstance(d, SubmitRequest):
+            reject_legacy_submit("Channel.submit", d)
+        spec = as_transform(d.transform)
+        slots = self._push(d.chain, tickets, d.src_pool, d.dst_pool,
+                           lowered, spec)
+        return Ticket(tickets=list(map(int, tickets)),
+                      channel=self.name, spilled=False,
+                      slots=slots, transform=spec.cache_token)
 
     def _push(
         self,

@@ -242,14 +242,12 @@ class PerfProbe:
         """Flat unified-namespace view of :meth:`snapshot` (DESIGN.md §9).
 
         Canonical keys: ``channels.<name>.<field>``, ``serve.<field>``,
-        ``translation.<field>``. Bare serve/translation field names read
-        through deprecated aliases; per-channel fields have no bare form
-        (they were never unambiguous). ``snapshot()`` keeps the nested
+        ``translation.<field>``. The bare-key deprecated aliases were
+        removed one release after 0.4. ``snapshot()`` keeps the nested
         legacy layout for stored BENCH documents.
         """
         from repro.obs.counters import PerfCounters
         data: Dict[str, object] = {}
-        aliases: Dict[str, str] = {}
         for name, c in sorted(self.channels.items()):
             for k, v in dataclasses.asdict(c).items():
                 data[f"channels.{name}.{k}"] = v
@@ -258,5 +256,4 @@ class PerfProbe:
                 ("translation", dataclasses.asdict(self.translation))):
             for k, v in block.items():
                 data[f"{prefix}.{k}"] = v
-                aliases[k] = f"{prefix}.{k}"
-        return PerfCounters(data, aliases=aliases)
+        return PerfCounters(data)

@@ -54,7 +54,7 @@ from .completion import CompletionQueue, CompletionRecord
 from .instrumentation import PerfProbe
 from .lowering import TranslationCache, disabled_stats
 from .ring import RingFull
-from .submit import SubmitRequest, SubmitResult, Ticket, warn_legacy_submit
+from .submit import SubmitRequest, SubmitResult, Ticket, reject_legacy_submit
 
 __all__ = [
     "DMARuntime", "SubmitRequest", "SubmitResult", "Ticket",
@@ -217,27 +217,24 @@ class DMARuntime:
         Unified form (DESIGN.md §9): ``submit(SubmitRequest) -> Ticket``,
         carrying chain + pools + transform + priority + completion
         callback. The legacy keyword form
-        ``submit(chain, src_pool=..., dst_pool=..., tier=...)`` keeps
-        working for one release behind a DeprecationWarning (``Ticket``
-        preserves the old ``SubmitResult`` field layout, so legacy
-        callers are unaffected by the return type).
+        ``submit(chain, src_pool=..., dst_pool=..., tier=...)`` was
+        removed one release after 0.4 and now raises ``TypeError``.
 
         Returns tickets (one per *planned* descriptor; the last ticket of
         a submission always exists, so callers wanting one completion per
         logical transfer hang their callback on ``tickets[-1]``).
         """
-        if isinstance(d, SubmitRequest):
-            if kw:
-                raise TypeError(
-                    "unified submit takes a single SubmitRequest; put "
-                    f"{sorted(kw)} on the request")
-            return self._submit_impl(
-                d.chain, src_pool=d.src_pool, dst_pool=d.dst_pool,
-                channel=d.channel, tier=d.tier, on_complete=d.on_complete,
-                run_coalescer=d.run_coalescer,
-                transform=as_transform(d.transform), priority=d.priority)
-        warn_legacy_submit("DMARuntime.submit")
-        return self._submit_impl(d, **kw)
+        if not isinstance(d, SubmitRequest):
+            reject_legacy_submit("DMARuntime.submit", d)
+        if kw:
+            raise TypeError(
+                "unified submit takes a single SubmitRequest; put "
+                f"{sorted(kw)} on the request")
+        return self._submit_impl(
+            d.chain, src_pool=d.src_pool, dst_pool=d.dst_pool,
+            channel=d.channel, tier=d.tier, on_complete=d.on_complete,
+            run_coalescer=d.run_coalescer,
+            transform=as_transform(d.transform), priority=d.priority)
 
     def _submit_impl(
         self,
@@ -552,9 +549,9 @@ class DMARuntime:
     def translation_stats(self) -> PerfCounters:
         """Translation-cache counters, unified ``translation.*`` namespace.
 
-        Old bare keys (``hits``, ``lookups``, ``hit_rate``, …) remain
-        readable as deprecated aliases for one release (DESIGN.md §9).
-        Zeros + ``translation.enabled`` False when lowering is off.
+        The bare-key deprecated aliases were removed one release after
+        0.4 (DESIGN.md §9). Zeros + ``translation.enabled`` False when
+        lowering is off.
         """
         return namespaced(self._translation_stats_raw(), "translation")
 

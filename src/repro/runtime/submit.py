@@ -10,10 +10,10 @@ returned different ticket types:
 
 This module defines the one contract all four now accept: a
 :class:`SubmitRequest` (chain + transform + priority + completion
-callback) in, a :class:`Ticket` out. The legacy keyword forms keep
-working for one release behind deprecation shims (each layer detects a
-non-``SubmitRequest`` first argument, emits a :class:`DeprecationWarning`
-via :func:`warn_legacy_submit`, and returns the legacy type).
+callback) in, a :class:`Ticket` out. The legacy keyword forms were
+removed one release after 0.4 as promised: a non-``SubmitRequest``
+first argument now raises ``TypeError`` at every layer
+(``tools/lint_submit_api.py`` hard-fails on any resurrected form).
 
 ``Ticket`` subsumes the old ``SubmitResult`` — same leading fields in
 the same positional order — so ``SubmitResult`` is now an alias and
@@ -22,19 +22,17 @@ existing unpacking/attribute code is unaffected.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, List, Optional
 
 from repro.core.transform import TransformLike
 
 
-def warn_legacy_submit(api: str) -> None:
-    """One DeprecationWarning per legacy-keyword submit call site."""
-    warnings.warn(
-        f"{api} with legacy keyword arguments is deprecated; pass a "
-        "SubmitRequest (repro.runtime.SubmitRequest). The keyword form "
-        "is removed one release after 0.4.",
-        DeprecationWarning, stacklevel=3)
+def reject_legacy_submit(api: str, first_arg: Any) -> None:
+    """Uniform TypeError for the removed legacy keyword forms."""
+    raise TypeError(
+        f"{api} requires a SubmitRequest "
+        "(repro.runtime.SubmitRequest); the legacy keyword form was "
+        f"removed one release after 0.4 (got {type(first_arg).__name__})")
 
 
 @dataclasses.dataclass

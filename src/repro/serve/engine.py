@@ -28,7 +28,7 @@ from repro.obs.metrics import Histogram
 from repro.obs.trace import Tracer, monotonic
 from repro.runtime import ChannelConfig, DMARuntime
 from repro.runtime.instrumentation import PerfProbe
-from repro.runtime.submit import SubmitRequest, Ticket, warn_legacy_submit
+from repro.runtime.submit import SubmitRequest, Ticket, reject_legacy_submit
 
 
 @dataclasses.dataclass
@@ -125,9 +125,8 @@ class ServeEngine:
         """Engine-side counters under the unified ``serve.*`` namespace.
 
         Canonical keys are ``serve.<field>`` plus a nested ``translation``
-        block (itself ``translation.*``-namespaced); the old bare keys and
-        ``translation_cache`` read through deprecated aliases (DESIGN.md
-        §9).
+        block (itself ``translation.*``-namespaced); the old bare-key
+        aliases were removed one release after 0.4 (DESIGN.md §9).
         """
         depths = self.runtime.speculation_depths()
         raw = {
@@ -159,8 +158,7 @@ class ServeEngine:
         # (DESIGN.md §7): artifact hit/miss/evict + plan-memo traffic.
         return namespaced(
             raw, "serve",
-            extra={"translation": self.runtime.translation_stats()},
-            extra_aliases={"translation_cache": "translation"})
+            extra={"translation": self.runtime.translation_stats()})
 
     # -- API -------------------------------------------------------------------
     def submit(self, req) -> Optional[Ticket]:
@@ -170,19 +168,17 @@ class ServeEngine:
         whose ``request`` field is the serve :class:`Request` (``transform``
         / ``priority`` / ``on_complete`` ride along) and returns the
         completion-descriptor :class:`~repro.runtime.Ticket` with ``uid``
-        set. The legacy positional-``Request`` form still works for one
-        release but warns and keeps returning ``None``.
+        set. The legacy positional-``Request`` form was removed one
+        release after 0.4 and raises ``TypeError``.
         """
-        if isinstance(req, SubmitRequest):
-            if req.request is None:
-                raise ValueError(
-                    "ServeEngine.submit needs SubmitRequest.request set to "
-                    "a serve Request")
-            return self._admit_request(req.request,
-                                       on_complete=req.on_complete)
-        warn_legacy_submit("ServeEngine.submit")
-        self._admit_request(req)
-        return None
+        if not isinstance(req, SubmitRequest):
+            reject_legacy_submit("ServeEngine.submit", req)
+        if req.request is None:
+            raise ValueError(
+                "ServeEngine.submit needs SubmitRequest.request set to "
+                "a serve Request")
+        return self._admit_request(req.request,
+                                   on_complete=req.on_complete)
 
     def _admit_request(self, req: Request, on_complete=None) -> Ticket:
         res = self.runtime.submit_control(

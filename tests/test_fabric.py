@@ -1,0 +1,345 @@
+"""Async fabric for cross-shard migration (DESIGN.md §10): link occupancy,
+ticket lifecycle, overlap accounting, rebalance planning, elastic resize,
+and shard loss with tickets in flight.
+
+No hypothesis dependency — this module must collect on minimal installs.
+Everything here is logical-round deterministic: no wall clock, no sleeps.
+"""
+import numpy as np
+import pytest
+
+from repro.distributed.fabric import (
+    COMPLETED,
+    EGRESS,
+    IN_FLIGHT,
+    INGRESS,
+    AsyncFabric,
+    FabricLink,
+    FabricTicket,
+    RebalancePlanner,
+)
+from repro.distributed.fault import ungraceful_resize
+from repro.distributed.sharded_runtime import (
+    ShardedDMARuntime,
+    ShardedKVPool,
+)
+from repro.obs.trace import Tracer
+
+
+# ---------------------------------------------------------------------------
+# FabricLink / AsyncFabric units
+# ---------------------------------------------------------------------------
+
+def test_fabric_link_occupancy_and_queueing_math():
+    ln = FabricLink(0, 1, latency=2, page_beats=3)
+    # Idle link: deliver = now + latency + pages * page_beats.
+    assert ln.send(0, 2) == 0 + 2 + 2 * 3
+    assert (ln.sends, ln.pages_sent, ln.queued_rounds) == (1, 2, 0)
+    assert ln.busy_rounds == 8 and ln.busy_until == 8
+    # A send entering the busy link queues behind the in-flight payload.
+    assert ln.send(1, 1) == 8 + 2 + 3
+    assert ln.queued_rounds == 7          # waited rounds 1..8
+    assert ln.busy_until == 13
+    # Zero-page control payload still occupies latency + one page beat.
+    assert ln.send(20, 0) == 20 + 2 + 3
+
+
+def _ticket(hop_id, src, dst, pages, priority=0):
+    return FabricTicket(
+        hop_id=hop_id, src_shard=src, dst_shard=dst, pages=pages,
+        pool_names=("kv.k",), rows_s=np.zeros(pages, np.int64),
+        rows_d=np.zeros(pages, np.int64), ctrl_ticket=0, stats=None,
+        priority=priority)
+
+
+def test_async_fabric_clock_links_and_deliveries():
+    fab = AsyncFabric(latency=1, page_beats=1)
+    t = _ticket(1, 0, 1, pages=2)
+    deliver = fab.send(t)
+    assert t.state == IN_FLIGHT and deliver == 3
+    assert fab.occupied_links() == 1
+    assert fab.deliveries() == []          # nothing arrived at round 0
+    for _ in range(3):
+        fab.advance()
+    out = fab.deliveries()
+    assert out == [t] and t.state == INGRESS
+    assert fab.in_flight == [] and fab.occupied_links() == 0
+    # Per-link counters export in stable (src, dst) order.
+    fab.send(_ticket(2, 1, 0, pages=1))
+    stats = fab.link_stats()
+    assert [(s["src"], s["dst"]) for s in stats] == [(0, 1), (1, 0)]
+    assert stats[0]["pages_sent"] == 2
+    with pytest.raises(ValueError):
+        AsyncFabric(latency=-1)
+    with pytest.raises(ValueError):
+        AsyncFabric(page_beats=0)
+
+
+# ---------------------------------------------------------------------------
+# RebalancePlanner: hysteresis, heat decay, spreading plan, placement
+# ---------------------------------------------------------------------------
+
+def test_planner_hysteresis_opens_high_closes_low():
+    pl = RebalancePlanner(2, window=2, high_water=1.5, low_water=1.1)
+    pl.observe([10.0, 10.0])
+    assert not pl.should_rebalance()
+    # Imbalance crosses high_water: the episode opens...
+    pl.observe([40.0, 10.0])
+    pl.observe([40.0, 10.0])
+    assert pl.imbalance() > 1.5 and pl.should_rebalance()
+    # ...and stays open in the dead band between the thresholds...
+    pl.observe([13.0, 10.0])
+    pl.observe([13.0, 10.0])
+    assert 1.1 < pl.imbalance() < 1.5 and pl.should_rebalance()
+    # ...until the imbalance falls under low_water.
+    pl.observe([10.0, 10.0])
+    pl.observe([10.0, 10.0])
+    assert not pl.should_rebalance()
+
+
+def test_planner_heat_decays_to_nothing_without_traffic():
+    pl = RebalancePlanner(2, heat_decay=0.5)
+    pl.observe([1.0, 1.0], hot_pages=[5])
+    assert pl.page_heat == {5: 1.0}
+    for _ in range(5):                     # 1 -> .5 -> .25 -> ... -> dropped
+        pl.observe([1.0, 1.0])
+    assert pl.page_heat == {}
+
+
+def _mesh_pool(num_shards, num_pages, row=4):
+    srt = ShardedDMARuntime(num_shards=num_shards)
+    kv = ShardedKVPool(srt, num_pages=num_pages, page=row, kv_heads=1,
+                       head_dim=1)
+    return srt, kv
+
+
+def test_planner_plan_spreads_hot_pages_across_all_receivers():
+    srt, kv = _mesh_pool(4, 64)
+    pl = RebalancePlanner(4, window=2)
+    hot = kv.alloc_on(0, 6)               # six hot pages, all on shard 0
+    for _ in range(3):
+        pl.observe([100.0, 10.0, 10.0, 10.0], hot_pages=hot)
+    out = pl.plan(kv)
+    assert out is not None
+    src, dst = out
+    assert sorted(src) == sorted(hot)
+    # Greedy least-projected-load: the heat spreads over every receiver
+    # instead of dumping the whole hot head on the single coldest shard.
+    assert {kv.owner.owner(p) for p in dst} == {1, 2, 3}
+    assert all(kv.owner.owner(p) == 0 for p in src)
+    assert pl.plans_emitted == 1 and pl.pages_planned == 6
+
+
+def test_planner_overshoot_guard_blocks_ping_pong_moves():
+    srt, kv = _mesh_pool(4, 64)
+    pl = RebalancePlanner(4, window=2)
+    (page,) = kv.alloc_on(0, 1)
+    # One page carries nearly all of the hot shard's load: moving it would
+    # leave the receiver hotter than the source, so the plan must decline
+    # (this is exactly the Zipf-head ping-pong failure mode).
+    for _ in range(2):
+        pl.observe([60.0, 30.0, 30.0, 30.0], hot_pages=[page] * 20)
+    assert pl.should_rebalance()
+    assert pl.plan(kv) is None
+    assert pl.plans_emitted == 0
+
+
+def test_planner_placement_spreads_by_free_capacity():
+    srt, kv = _mesh_pool(4, 64)
+    kv.alloc_on(1, 12)                    # shard 1 nearly full (4 free)
+    kv.alloc_on(2, 8)                     # shard 2 half full
+    pl = RebalancePlanner(4)
+    pages = list(range(6))
+    dst = pl.placement(kv, pages, survivors=[1, 2, 3])
+    owners = [kv.owner.owner(p) for p in dst]
+    # shard 3 (16 free) absorbs the most, shard 1 (4 free) the least.
+    assert owners.count(3) > owners.count(1)
+    assert len(dst) == len(set(dst)) == 6
+    with pytest.raises(ValueError, match="at least one survivor"):
+        pl.placement(kv, pages, survivors=[])
+
+
+# ---------------------------------------------------------------------------
+# Async fabric through the sharded runtime: equivalence, pump stepper,
+# overlap accounting, priority ordering
+# ---------------------------------------------------------------------------
+
+def _filled(num_shards, num_pages, row=8, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    srt = ShardedDMARuntime(num_shards=num_shards, **kw)
+    kv = ShardedKVPool(srt, num_pages=num_pages, page=row, kv_heads=1,
+                       head_dim=1)
+    content = rng.standard_normal((num_pages, row)).astype(np.float32)
+    for p in range(num_pages):
+        kv.write_page(p, content[p], -content[p])
+    return srt, kv, content
+
+
+def test_async_and_sync_fabric_agree_on_contents_and_plan_shape():
+    src = [1, 2, 3, 17, 18, 40, 41, 42, 9]
+    dst = [33, 34, 35, 50, 51, 10, 11, 12, 28]
+    outs = {}
+    for mode in ("async", "sync"):
+        srt, kv, content = _filled(4, 64, seed=3, fabric=mode)
+        stats = kv.move_pages(src, dst)
+        outs[mode] = (srt.gather_pool(kv.POOL_K), stats)
+    np.testing.assert_array_equal(outs["async"][0], outs["sync"][0])
+    a, s = outs["async"][1], outs["sync"][1]
+    assert (a.pages, a.cross_pages, a.local_pages, a.hops) == \
+        (s.pages, s.cross_pages, s.local_pages, s.hops)
+    assert a.hop_completions == a.hops == s.hop_completions
+    # The sync fabric has no link model and never reports overlap.
+    assert s.fabric_inflight_rounds == 0 and s.overlap_ratio == 0.0
+
+
+def test_sync_fabric_rejects_pump_and_has_no_fabric_object():
+    srt, kv, _ = _filled(2, 16, fabric="sync")
+    assert srt.fabric is None
+    with pytest.raises(RuntimeError, match="requires fabric='async'"):
+        srt.pump()
+    with pytest.raises(RuntimeError, match="requires fabric='async'"):
+        ungraceful_resize(kv, 0)
+
+
+def test_drain_false_leaves_tickets_for_the_caller_to_pump():
+    srt, kv, content = _filled(2, 32, seed=1)
+    stats = kv.move_pages([1, 2, 3], [20, 21, 22], drain=False)
+    assert srt.fabric_outstanding() == 1
+    assert srt.plan_outstanding(stats) == 1
+    assert stats.hop_completions == 0      # nothing retired yet
+    srt.pump_until_idle()
+    srt.drain_until_idle()
+    assert srt.fabric_outstanding() == 0
+    assert srt.plan_outstanding(stats) == 0
+    # Hops retired inside pump() still land their §II-D writebacks on the
+    # plan's own stats and on the mesh aggregate exactly once.
+    assert stats.hop_completions == stats.hops == 1
+    assert srt.migration.hop_completions == 1
+    want = content.copy()
+    want[[20, 21, 22]] = content[[1, 2, 3]]
+    np.testing.assert_array_equal(
+        srt.gather_pool(kv.POOL_K).reshape(32, 8), want)
+
+
+def test_overlap_rounds_are_global_not_per_plan():
+    srt, kv, _ = _filled(2, 32, seed=2)
+    plans = [kv.move_pages([1 + i], [16 + i], drain=False)
+             for i in range(4)]
+    srt.pump_until_idle()
+    srt.drain_until_idle()
+    # Rounds are mesh-wide: only the aggregate carries them, and the
+    # hidden count can never exceed the in-flight count.
+    agg = srt.migration
+    assert agg.fabric_inflight_rounds > 0
+    assert 0 <= agg.fabric_hidden_rounds <= agg.fabric_inflight_rounds
+    assert 0.0 <= agg.overlap_ratio <= 1.0
+    for st in plans:
+        assert st.fabric_inflight_rounds == st.fabric_hidden_rounds == 0
+        assert st.hop_completions == st.hops == 1
+
+
+def test_priority_orders_link_access_between_ready_tickets():
+    srt, kv, _ = _filled(2, 32, seed=4)
+    # Background (0) submitted first, foreground (1) second; one egress
+    # chain each (K only) so both tickets become ready the same round.
+    bg = srt.migrate_rows((kv.POOL_K,), [1], [20], drain=False, priority=0)
+    fg = srt.migrate_rows((kv.POOL_K,), [2], [21], drain=False, priority=1)
+    tickets = {t.priority: t for t in srt._pending_hops}
+    assert set(tickets) == {0, 1}
+    srt.pump_until_idle()
+    # The foreground ticket claimed the shared 0->1 link first; the
+    # background payload queued behind it.
+    assert tickets[1].sent_round == tickets[0].sent_round
+    assert tickets[1].deliver_round < tickets[0].deliver_round
+    assert srt.fabric.link(0, 1).queued_rounds > 0
+    assert tickets[0].state == tickets[1].state == COMPLETED
+    assert bg.hop_completions == fg.hop_completions == 1
+
+
+def test_fabric_hops_emit_link_occupancy_counter_events():
+    srt, kv, _ = _filled(2, 16, seed=5)
+    tr = Tracer()
+    srt.attach_tracer(tr)
+    kv.move_pages([1, 2], [10, 11])
+    counters = [e for e in tr._buf
+                if e.ph == "C" and e.name.startswith("fabric.link")]
+    assert counters, "fabric link counters missing from the trace"
+    assert any(e.args.get("pages_in_flight", 0) > 0 for e in counters)
+    # Delivery zeroes the in-flight series so Perfetto shows a pulse.
+    assert any(e.args.get("pages_in_flight") == 0 for e in counters)
+
+
+# ---------------------------------------------------------------------------
+# Elastic resize: graceful evacuate/readmit, and shard loss with tickets
+# in flight (fault.ungraceful_resize) against a numpy oracle
+# ---------------------------------------------------------------------------
+
+def test_evacuate_readmit_roundtrip_preserves_contents():
+    srt, kv, content = _filled(4, 64, seed=6)
+    live = kv.alloc_on(2, 5)
+    remap = kv.evacuate(2)
+    assert srt.active == [True, True, False, True]
+    assert sorted(remap) == sorted(live)
+    assert all(kv.owner.owner(p) != 2 for p in remap.values())
+    for old, new in remap.items():
+        np.testing.assert_array_equal(kv.page_rows([new])[0][0],
+                                      content[old])
+    with pytest.raises(RuntimeError, match="left the mesh"):
+        kv.alloc_on(2, 1)
+    kv.readmit(2)
+    assert srt.active == [True] * 4
+    assert kv.free_pages_on(2) == len(list(kv.owner.shard_pages(2)))
+
+
+@pytest.mark.parametrize("inject_round", [0, 1, 2, 3, 5])
+def test_shard_loss_with_tickets_in_flight_loses_no_pages(inject_round):
+    """Satellite: ungraceful resize while hops touching the lost shard sit
+    at every lifecycle stage. The numpy oracle checks each migrated page's
+    content lands exactly once on a survivor — no lost, no duplicated
+    destinations — whatever round the loss is injected."""
+    lost = 1
+    srt, kv, content = _filled(4, 64, seed=7)
+    alloc = {s: kv.alloc_on(s, 8) for s in range(4)}
+
+    # Hops INTO the lost shard (must be re-routed), OUT of it (their
+    # sources leave via the fabric, not evacuation), and bystander
+    # traffic that must survive untouched.
+    moves = list(zip(alloc[0][:3], kv.alloc_on(lost, 3))) + \
+        list(zip(alloc[lost][:3], kv.alloc_on(2, 3))) + \
+        list(zip(alloc[3][:2], kv.alloc_on(0, 2)))
+    src, dst = [list(x) for x in zip(*moves)]
+    stats = kv.move_pages(src, dst, drain=False)
+    assert stats.hops == 3
+
+    srt.pump(inject_round)
+    remap = ungraceful_resize(kv, lost)
+
+    assert srt.active == [True, False, True, True]
+    assert srt.fabric_outstanding() == 0
+    assert stats.hop_completions == stats.hops      # re-routed hops retired
+    # Exactly-once landing: remapped destinations are unique survivors.
+    landed = list(remap.values())
+    assert len(landed) == len(set(landed))
+    assert all(kv.owner.owner(p) != lost for p in landed)
+
+    # Every migrated page's content is readable at its (possibly
+    # re-routed) destination.
+    for s, d in moves:
+        final = remap[d] if kv.owner.owner(d) == lost else d
+        k, v = kv.page_rows([final])
+        np.testing.assert_array_equal(k[0], content[s])
+        np.testing.assert_array_equal(v[0], -content[s])
+    # The lost shard's untouched live pages were evacuated with content.
+    for p in alloc[lost][3:]:
+        np.testing.assert_array_equal(kv.page_rows([remap[p]])[0][0],
+                                      content[p])
+    # Bystanders on survivors are untouched.
+    for p in alloc[2][3:]:
+        np.testing.assert_array_equal(kv.page_rows([p])[0][0], content[p])
+
+
+def test_ungraceful_resize_rejects_already_left_shard():
+    srt, kv, _ = _filled(2, 16, seed=8)
+    kv.evacuate(1)
+    with pytest.raises(ValueError, match="already left"):
+        ungraceful_resize(kv, 1)

@@ -19,7 +19,13 @@ from repro.core.signature import (
 )
 from repro.core.simulator import SimConfig, simulate
 from repro.perf.workloads import Scale, generate
-from repro.runtime import ChannelConfig, DMARuntime, PerfProbe, coalesce
+from repro.runtime import (
+    ChannelConfig,
+    DMARuntime,
+    PerfProbe,
+    SubmitRequest,
+    coalesce,
+)
 from repro.runtime.lowering import (
     TranslationCache,
     aggregate_stats,
@@ -369,7 +375,8 @@ def _drain_workload(arch, workload, *, translation, rounds=2, seed=0):
     rt.register_pool("dst", jnp.zeros(n_padded, jnp.float32))
     for _ in range(rounds):
         for d in wl.chains:
-            rt.submit(d, src_pool="src", dst_pool="dst", channel="ch0")
+            rt.submit(SubmitRequest(chain=d, src_pool="src",
+                                    dst_pool="dst", channel="ch0"))
         rt.drain_until_idle()
     return np.asarray(rt.pools["dst"]), rt, wl, src0
 
@@ -386,7 +393,7 @@ def test_cached_drains_bit_identical_across_registry(arch):
         want, _ = execute_chain_host_np(d, src0, want)
     np.testing.assert_array_equal(cached, want)
     st = rt.translation_stats()
-    assert st["enabled"] and st["lookups"] > 0
+    assert st["translation.enabled"] and st["translation.lookups"] > 0
 
 
 @pytest.mark.parametrize("workload",
@@ -410,15 +417,15 @@ def test_steady_state_replays_hit_both_cache_layers():
     st = rt.translation_stats()
     # Rounds 2..4 resubmit identical chains: plan memo and artifact cache
     # both run hot, so hits dominate lookups by at least the replay share.
-    assert st["hit_rate"] >= 0.5
-    assert st["plan_hits"] >= 3 * st["plan_misses"]
+    assert st["translation.hit_rate"] >= 0.5
+    assert st["translation.plan_hits"] >= 3 * st["translation.plan_misses"]
 
 
 def test_runtime_stats_and_disabled_escape_hatch():
     _, rt, _, _ = _drain_workload("qwen2.5-3b", "paged_kv",
                                   translation=True, rounds=1)
     block = rt.stats()["translation_cache"]
-    assert block["enabled"] and block["capacity"] > 0
+    assert block["translation.enabled"] and block["translation.capacity"] > 0
     _, rt_off, _, _ = _drain_workload("qwen2.5-3b", "paged_kv",
                                       translation=False, rounds=1)
     off = rt_off.stats()["translation_cache"]

@@ -303,7 +303,7 @@ def test_recorded_serve_trace_covers_every_lifecycle_phase(tmp_path):
     assert json.loads((tmp_path / "serve.trace.json").read_text()) == doc
     # histograms rode along on the probe
     assert probe.metrics_snapshot()["request_latency_steps"]["n"] == 6
-    assert pc["request_latency_steps_p50"] > 0
+    assert pc["serve.request_latency_steps_p50"] > 0
 
 
 def test_recorded_trace_is_deterministic_in_seed():
@@ -342,7 +342,7 @@ def test_mesh2_trace_links_migration_hops_with_flow_arrows(tmp_path):
     # per-shard serve tracks exist and the mesh-wide latency gated metrics
     # agree with the merged histogram snapshot
     assert {"shard0/serve", "shard1/serve"} <= {e.track for e in evs}
-    assert pc["request_latency_steps"]["n"] == 6
+    assert pc["sharded.request_latency_steps"]["n"] == 6
     write_chrome_trace(str(tmp_path / "mesh2.trace.json"), evs)
 
 
@@ -357,7 +357,7 @@ def test_disabled_tracer_dispatch_overhead_within_two_percent():
     import jax.numpy as jnp
 
     from repro.core.chain import from_segments
-    from repro.runtime import default_runtime
+    from repro.runtime import SubmitRequest, default_runtime
 
     pool, n_desc = 1 << 14, 128
     rng = np.random.default_rng(0)
@@ -376,7 +376,7 @@ def test_disabled_tracer_dispatch_overhead_within_two_percent():
 
     def dispatch(rt):
         t0 = time.perf_counter()
-        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
         rt.drain_until_idle()
         return time.perf_counter() - t0
 

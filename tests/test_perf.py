@@ -16,9 +16,10 @@ from repro.perf.workloads import (
     Scale,
     arch_params,
     generate,
+    zipf_page_traffic,
 )
 from repro.perf.sweep import default_spec, run_sweep
-from repro.runtime import ChannelConfig, DMARuntime, PerfProbe
+from repro.runtime import ChannelConfig, DMARuntime, PerfProbe, SubmitRequest
 
 TINY = Scale("tiny", n_bursts=1, burst_len=24, pool_elems=1 << 12,
              max_len=128, ring_capacity=64, sim_transfers=60)
@@ -61,6 +62,28 @@ def test_generators_deterministic_in_seed():
             for da, dc in zip(a.chains, c.chains)), name
 
 
+def test_zipf_page_traffic_is_skewed_seeded_and_validated():
+    rng = np.random.default_rng(0)
+    t = zipf_page_traffic(64, 4096, alpha=1.1, rng=rng)
+    assert t.shape == (4096,) and t.min() >= 0 and t.max() < 64
+    # Zipf skew: the single hottest page dominates the median page.
+    counts = np.bincount(t, minlength=64)
+    assert counts.max() > 4 * np.median(counts[counts > 0])
+    # Same rng state -> same traffic; hot_pages pins rank -> page.
+    a = zipf_page_traffic(16, 256, rng=np.random.default_rng(7))
+    b = zipf_page_traffic(16, 256, rng=np.random.default_rng(7))
+    np.testing.assert_array_equal(a, b)
+    ident = zipf_page_traffic(16, 256, rng=np.random.default_rng(7),
+                              hot_pages=np.arange(16))
+    assert np.argmax(np.bincount(ident, minlength=16)) == 0
+    with pytest.raises(ValueError, match="num_pages"):
+        zipf_page_traffic(0, 10, rng=rng)
+    with pytest.raises(ValueError, match="alpha"):
+        zipf_page_traffic(4, 10, alpha=0.0, rng=rng)
+    with pytest.raises(ValueError, match="whole page space"):
+        zipf_page_traffic(4, 10, rng=rng, hot_pages=np.arange(3))
+
+
 def test_arch_parameterization_differs_across_archs():
     params = {a: arch_params(get_config(a)) for a in list_archs()}
     assert len({p.page_elems for p in params.values()}) > 1
@@ -100,7 +123,7 @@ def test_sweep_document_is_bit_for_bit_deterministic():
 
 def test_sweep_document_schema_and_counters():
     doc = run_sweep(_mini_spec())
-    assert doc["schema_version"] == 6
+    assert doc["schema_version"] == 7
     assert doc["translation_cache_enabled"] is True
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -174,7 +197,7 @@ def test_committed_baseline_upholds_adaptive_claim():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_perf.json"
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == 6
+    assert doc["schema_version"] == 7
     checked = 0
     for key, cell in doc["cells"].items():
         if cell.get("kind") != "dma":
@@ -231,7 +254,8 @@ def test_probe_counters_match_runtime_stats():
     rt.register_pool("src", jnp.arange(256, dtype=jnp.float32))
     rt.register_pool("dst", jnp.zeros(256, jnp.float32))
     d = from_segments([0, 32, 64], [0, 32, 64], [16, 16, 16])
-    rt.submit(d, src_pool="src", dst_pool="dst", channel="a")
+    rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst",
+                            channel="a"))
     rt.drain_until_idle()
     c = probe.channels["a"]
     st = rt.stats()
@@ -255,8 +279,8 @@ def test_probe_records_ring_full_backpressure():
     rt.register_pool("dst", jnp.zeros(64, jnp.float32))
     for k in range(3):
         d = from_segments([8 * k] * 3, [8 * k] * 3, [2, 2, 2])
-        rt.submit(d, src_pool="src", dst_pool="dst", channel="a",
-                  run_coalescer=False)
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst",
+                                channel="a", run_coalescer=False))
     rt.drain_until_idle()
     assert probe.channels["a"].ring_full_events > 0
     assert probe.channels["a"].occupancy_peak <= 4
@@ -270,8 +294,8 @@ def test_probe_detach_stops_counting():
     rt.attach_probe(None)
     rt.register_pool("src", jnp.arange(64, dtype=jnp.float32))
     rt.register_pool("dst", jnp.zeros(64, jnp.float32))
-    rt.submit(from_segments([0], [0], [4]), src_pool="src", dst_pool="dst",
-              channel="a")
+    rt.submit(SubmitRequest(chain=from_segments([0], [0], [4]),
+                            src_pool="src", dst_pool="dst", channel="a"))
     rt.drain_until_idle()
     assert "a" not in probe.channels
 
@@ -281,8 +305,8 @@ def test_channel_stats_gain_occupancy_and_drain_time_without_probe():
                                    ring_capacity=32)])
     rt.register_pool("src", jnp.arange(64, dtype=jnp.float32))
     rt.register_pool("dst", jnp.zeros(64, jnp.float32))
-    rt.submit(from_segments([0, 8], [0, 8], [4, 4]), src_pool="src",
-              dst_pool="dst", channel="a")
+    rt.submit(SubmitRequest(chain=from_segments([0, 8], [0, 8], [4, 4]),
+                            src_pool="src", dst_pool="dst", channel="a"))
     rt.drain_until_idle()
     st = rt.stats()["channels"]["a"]
     assert st["occupancy_peak"] > 0

@@ -265,7 +265,8 @@ def test_quick_subset_always_keeps_serve_cells():
 SHARDED_CELL = "sharded/archA/mesh4"
 
 
-def _sharded_cell(cycles=120.0, util=0.88, merge=1.8, mesh=4):
+def _sharded_cell(cycles=120.0, util=0.88, merge=1.8, mesh=4,
+                  overlap=0.85, p99=140.0, rebal=5.0, retained=0.95):
     return {
         "kind": "sharded",
         "arch": "archA", "workload": "kv_migration", "mesh": mesh,
@@ -273,6 +274,10 @@ def _sharded_cell(cycles=120.0, util=0.88, merge=1.8, mesh=4):
             "cross_shard_migration_cycles": cycles,
             "per_shard_bus_utilization": util,
             "migration_chain_merge_ratio": merge,
+            "migration_overlap_ratio": overlap,
+            "p99_migration_stall_cycles": p99,
+            "rebalance_convergence_steps": rebal,
+            "throughput_retained_during_resize": retained,
         },
         "counters": {},
     }
@@ -289,6 +294,21 @@ def test_sharded_cell_gates_its_metrics_with_polarity():
     better = _doc(cells={CELL: _cell(),
                          SHARDED_CELL: _sharded_cell(cycles=50.0,
                                                      util=0.95)})
+    assert gate.compare(base, better) == []
+
+
+def test_sharded_fabric_metrics_gate_with_their_own_polarity():
+    # Async-fabric metrics (schema v7): overlap and retained-throughput
+    # regress downward; stall p99 and convergence steps regress upward.
+    base = _doc(cells={SHARDED_CELL: _sharded_cell()})
+    worse = _doc(cells={SHARDED_CELL: _sharded_cell(
+        overlap=0.60, p99=170.0, rebal=9.0, retained=0.80)})
+    regs = gate.compare(base, worse)
+    assert sorted(r.metric for r in regs) == [
+        "migration_overlap_ratio", "p99_migration_stall_cycles",
+        "rebalance_convergence_steps", "throughput_retained_during_resize"]
+    better = _doc(cells={SHARDED_CELL: _sharded_cell(
+        overlap=1.0, p99=100.0, rebal=3.0, retained=1.0)})
     assert gate.compare(base, better) == []
 
 

@@ -17,6 +17,7 @@ from repro.runtime import (
     RingFull,
     RoundRobinArbiter,
     SubmissionRing,
+    SubmitRequest,
     WeightedArbiter,
     coalesce,
     default_runtime,
@@ -200,7 +201,8 @@ def test_four_channels_drain_irregular_transfers_bit_identical():
         # exercised by overlapping in-chain writes below).
         t = k * 120 + np.concatenate([[0], np.cumsum(lens[:-1])])
         d = from_segments(s, t, lens)
-        res = rt.submit(d, src_pool="src", dst_pool="dst")
+        res = rt.submit(SubmitRequest(chain=d, src_pool="src",
+                                      dst_pool="dst"))
         chans.add(res.channel)
         oracle, _ = execute_chain_host(d, src, oracle)
 
@@ -220,7 +222,7 @@ def test_scheduler_coalesces_contiguous_page_workload():
     unit = 32
     d = from_segments(np.arange(64) * unit, np.arange(64) * unit,
                       [unit] * 64)   # fully contiguous page run
-    res = rt.submit(d, src_pool="src", dst_pool="dst")
+    res = rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
     assert res.coalesce is not None
     assert res.coalesce.n_out < res.coalesce.n_in  # coalescer shrank it
     assert res.coalesce.n_out == 1
@@ -237,8 +239,9 @@ def test_backpressure_block_drains_ring():
     rt.register_pool("src", jnp.arange(64, dtype=jnp.float32))
     rt.register_pool("dst", jnp.zeros(64, jnp.float32))
     for k in range(6):   # 6 single-descriptor chains through a 4-slot ring
-        rt.submit(from_segments([k * 8], [k * 8], [8]),
-                  src_pool="src", dst_pool="dst", run_coalescer=False)
+        rt.submit(SubmitRequest(chain=from_segments([k * 8], [k * 8], [8]),
+                                src_pool="src", dst_pool="dst",
+                                run_coalescer=False))
     rt.drain_until_idle()
     np.testing.assert_array_equal(np.asarray(rt.pool("dst"))[:48],
                                   np.arange(48, dtype=np.float32))
@@ -252,8 +255,10 @@ def test_backpressure_spill_replays_on_drain():
     rt.register_pool("dst", jnp.zeros(64, jnp.float32))
     spilled = 0
     for k in range(6):
-        res = rt.submit(from_segments([k * 8], [k * 8], [8]),
-                        src_pool="src", dst_pool="dst", run_coalescer=False)
+        res = rt.submit(
+            SubmitRequest(chain=from_segments([k * 8], [k * 8], [8]),
+                          src_pool="src", dst_pool="dst",
+                          run_coalescer=False))
         spilled += res.spilled
     assert spilled > 0
     rt.drain_until_idle()
@@ -312,7 +317,7 @@ def test_channel_drain_via_pallas_kernel_matches_blocked_2d():
                                        use_kernel=use_kernel)])
         rt.register_pool("src", jnp.asarray(src))
         rt.register_pool("dst", jnp.asarray(dst))
-        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
         rt.drain_until_idle()
         outs[use_kernel] = np.asarray(rt.pool("dst"))
     np.testing.assert_array_equal(outs[False], src[perm])
@@ -330,7 +335,7 @@ def test_fused_2d_drain_across_channels():
     perm = rng.permutation(rows)
     for part in np.array_split(np.arange(rows), 4):  # 4 chains, 4 channels
         d = D.DescriptorArray.create(perm[part], part, np.ones(len(part)))
-        rt.submit(d, src_pool="src", dst_pool="dst")
+        rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst"))
     rt.drain_all()   # single fused jitted call covers all four channels
     np.testing.assert_array_equal(np.asarray(rt.pool("dst")), src[perm])
     st = rt.stats()["channels"]
@@ -345,7 +350,8 @@ def test_chain_longer_than_ring_chunks_instead_of_hanging():
     rt.register_pool("dst", jnp.zeros(128, jnp.float32))
     # 12 descriptors through a 4-slot ring in one submit call.
     d = from_segments(np.arange(12) * 8, np.arange(12) * 8, [8] * 12)
-    res = rt.submit(d, src_pool="src", dst_pool="dst", run_coalescer=False)
+    res = rt.submit(SubmitRequest(chain=d, src_pool="src", dst_pool="dst",
+                                  run_coalescer=False))
     assert len(res.tickets) == 12
     rt.drain_until_idle()
     np.testing.assert_array_equal(np.asarray(rt.pool("dst"))[:96],
@@ -354,7 +360,8 @@ def test_chain_longer_than_ring_chunks_instead_of_hanging():
     bad = D.DescriptorArray.create(np.arange(6) * 8, np.arange(6) * 8,
                                    [8] * 6, nxt=[5, 0, 1, 2, 3, -1])
     with pytest.raises(ValueError, match="not sequentially linked"):
-        rt.submit(bad, src_pool="src", dst_pool="dst", run_coalescer=False)
+        rt.submit(SubmitRequest(chain=bad, src_pool="src", dst_pool="dst",
+                                run_coalescer=False))
 
 
 def test_fused_2d_drain_respects_cross_batch_dependencies():
@@ -363,10 +370,10 @@ def test_fused_2d_drain_respects_cross_batch_dependencies():
     rt.register_pool("p", jnp.asarray(src))
     # Dependent moves on one channel: row0 -> row1, then row1 -> row2.
     # Sequential semantics: row2 ends up with the ORIGINAL row0.
-    rt.submit(D.DescriptorArray.create([0], [1], [1]),
-              src_pool="p", dst_pool="p")
-    rt.submit(D.DescriptorArray.create([1], [2], [1]),
-              src_pool="p", dst_pool="p")
+    rt.submit(SubmitRequest(chain=D.DescriptorArray.create([0], [1], [1]),
+                            src_pool="p", dst_pool="p"))
+    rt.submit(SubmitRequest(chain=D.DescriptorArray.create([1], [2], [1]),
+                            src_pool="p", dst_pool="p"))
     rt.drain_all()
     got = np.asarray(rt.pool("p"))
     np.testing.assert_array_equal(got[1], src[0])

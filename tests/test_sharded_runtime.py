@@ -23,6 +23,7 @@ from repro.distributed.sharded_runtime import (
     resolve_num_shards,
 )
 from repro.runtime import ChannelConfig, DMARuntime
+from repro.runtime.submit import SubmitRequest
 
 
 # ---------------------------------------------------------------------------
@@ -46,6 +47,47 @@ def test_set_mesh_none_clears_rules_like_clear_mesh():
     shardlib.clear_mesh()
     assert shardlib.current_mesh() is None
     assert shardlib.current_rules() == {}
+
+
+class _BigFakeMesh:
+    shape = {"data": 4, "model": 2}
+
+
+def test_use_mesh_restores_state_when_body_resizes_mesh_and_raises():
+    # Elastic-resize hazard: the body legitimately swaps in a grown mesh
+    # (and new rules), then fails mid-launch. The pre-with pair must come
+    # back — not the resized one, and not a half-cleared state.
+    shardlib.set_mesh(_FakeMesh())
+    shardlib.set_rules({"batch": "data"})
+    with pytest.raises(RuntimeError):
+        with shardlib.use_mesh(_FakeMesh(), {"batch": "data"}):
+            shardlib.set_mesh(_BigFakeMesh())
+            shardlib.set_rules({"batch": "data", "heads": "model"})
+            raise RuntimeError("resize failed mid-launch")
+    assert isinstance(shardlib.current_mesh(), _FakeMesh)
+    assert shardlib.current_rules() == {"batch": "data"}
+    # A body that tears the mesh down entirely restores the same way.
+    with pytest.raises(RuntimeError):
+        with shardlib.use_mesh(_BigFakeMesh()):
+            shardlib.clear_mesh()
+            raise RuntimeError("boom")
+    assert isinstance(shardlib.current_mesh(), _FakeMesh)
+    assert shardlib.current_rules() == {"batch": "data"}
+    shardlib.clear_mesh()
+
+
+def test_use_mesh_restores_state_when_install_itself_throws():
+    # A bad rule table must not leave the new mesh installed with the old
+    # rules: the install happens inside the restore scope.
+    shardlib.set_mesh(_FakeMesh())
+    shardlib.set_rules({"batch": "data"})
+    with pytest.raises(TypeError):
+        with shardlib.use_mesh(_BigFakeMesh(), rules=42):   # not a mapping
+            pragma = None   # pragma: no cover - body never runs
+            del pragma
+    assert isinstance(shardlib.current_mesh(), _FakeMesh)
+    assert shardlib.current_rules() == {"batch": "data"}
+    shardlib.clear_mesh()
 
 
 def test_use_mesh_restores_previous_state_even_on_error():
@@ -142,10 +184,10 @@ def test_single_shard_migration_bit_identical_to_unsharded_runtime():
     s = np.asarray(src, np.int64) * row_elems
     t = np.asarray(dst, np.int64) * row_elems
     ln = np.full(len(src), row_elems, np.int64)
-    rt.submit(from_segments(s, t, ln), src_pool="kv.k", dst_pool="kv.k",
-              tier="serial")
-    rt.submit(from_segments(s, t, ln), src_pool="kv.v", dst_pool="kv.v",
-              tier="serial")
+    rt.submit(SubmitRequest(chain=from_segments(s, t, ln), src_pool="kv.k",
+                            dst_pool="kv.k", tier="serial"))
+    rt.submit(SubmitRequest(chain=from_segments(s, t, ln), src_pool="kv.v",
+                            dst_pool="kv.v", tier="serial"))
     rt.drain_until_idle()
 
     logical = num_pages * row_elems
@@ -336,23 +378,34 @@ def test_simulate_multichannel_default_path_unchanged_by_sharding_params():
 
 
 @pytest.mark.slow  # full mesh axis incl. 8 shards: CI sharded/slow lane
-def test_sharded_cell_deterministic_and_monotone_in_mesh():
-    from repro.perf.sharded_cell import run_sharded_cell
+def test_sharded_cell_deterministic_and_meets_fabric_floors():
+    from repro.perf.sharded_cell import (
+        MIN_OVERLAP_RATIO,
+        MIN_RETAINED_THROUGHPUT,
+        SHARDED_GATED_METRICS,
+        run_sharded_cell,
+    )
     cells = {}
     for mesh in (1, 2, 4, 8):
         m1, c1 = run_sharded_cell(0, mesh, repeats=2)
         m2, c2 = run_sharded_cell(0, mesh, repeats=2)
         assert (m1, c1) == (m2, c2), f"mesh {mesh} not deterministic"
-        assert set(m1) == {"cross_shard_migration_cycles",
-                           "per_shard_bus_utilization",
-                           "migration_chain_merge_ratio"}
+        assert set(m1) == set(SHARDED_GATED_METRICS)
         cells[mesh] = m1
+    # Mesh 1 has no fabric: every fabric-dependent metric pins to zero.
     assert cells[1]["cross_shard_migration_cycles"] == 0.0
-    assert cells[2]["cross_shard_migration_cycles"] > 0.0
-    assert cells[4]["cross_shard_migration_cycles"] > \
-        cells[2]["cross_shard_migration_cycles"]
-    assert cells[8]["cross_shard_migration_cycles"] > \
-        cells[4]["cross_shard_migration_cycles"]
+    assert cells[1]["migration_overlap_ratio"] == 0.0
+    assert cells[1]["throughput_retained_during_resize"] == 1.0
+    for mesh in (2, 4, 8):
+        assert cells[mesh]["cross_shard_migration_cycles"] > 0.0
+        assert cells[mesh]["p99_migration_stall_cycles"] > 0.0
+        assert cells[mesh]["rebalance_convergence_steps"] > 0
+    # The cell enforces these floors itself at mesh >= 4 (RuntimeError);
+    # assert them here too so a silently-weakened cell still fails.
+    for mesh in (4, 8):
+        assert cells[mesh]["migration_overlap_ratio"] >= MIN_OVERLAP_RATIO
+        assert cells[mesh]["throughput_retained_during_resize"] >= \
+            MIN_RETAINED_THROUGHPUT
     for m in cells.values():
         assert m["migration_chain_merge_ratio"] >= 1.0
         assert 0.0 < m["per_shard_bus_utilization"] <= 1.0
@@ -378,9 +431,9 @@ def test_sharded_serve_routes_by_ownership_and_migrates_remote_pages():
     # Shard-local requests go to their owner; no migration happens.
     for uid in range(4):
         pages = kv.alloc_on(uid % 2, 2)
-        shard = eng.submit(Request(uid=uid, prompt=[1, 2, 3],
-                                   max_new_tokens=2, kv_pages=pages))
-        assert shard == uid % 2
+        t = eng.submit(SubmitRequest(request=Request(
+            uid=uid, prompt=[1, 2, 3], max_new_tokens=2, kv_pages=pages)))
+        assert t.shard == uid % 2
     assert eng.remote_page_reads == 0
 
     # A request whose pages straddle shards routes to the majority owner
@@ -389,7 +442,7 @@ def test_sharded_serve_routes_by_ownership_and_migrates_remote_pages():
     p1 = kv.alloc_on(1, 2)
     mixed = Request(uid=9, prompt=[4, 5], max_new_tokens=2,
                     kv_pages=p0 + p1)
-    shard = eng.submit(mixed)
+    shard = eng.submit(SubmitRequest(request=mixed)).shard
     assert shard == 1
     assert eng.remote_page_reads == 1
     assert eng.migration.pages == 1 and eng.migration.hops == 1
@@ -402,7 +455,8 @@ def test_sharded_serve_routes_by_ownership_and_migrates_remote_pages():
     p0b = kv.alloc_on(0, 1)
     dup = Request(uid=10, prompt=[6], max_new_tokens=2,
                   kv_pages=p0b + p0b + kv.alloc_on(1, 3))
-    assert eng.submit(dup) == 1             # majority owner wins, 2 vs 3
+    # majority owner wins, 2 vs 3
+    assert eng.submit(SubmitRequest(request=dup)).shard == 1
     assert len(set(dup.kv_pages)) == 4      # both remote copies remapped alike
     assert all(kv.owner.owner(p) == 1 for p in dup.kv_pages)
     kv.release(sorted(set(dup.kv_pages)))
@@ -414,8 +468,8 @@ def test_sharded_serve_routes_by_ownership_and_migrates_remote_pages():
     assert sorted(done) == [0, 1, 2, 3, 9, 10]
     assert len(eng.poll_completed()) == 6
     pc = eng.perf_counters()
-    assert pc["requests_per_shard"] == [2, 4]
-    assert pc["completed"] == 6
+    assert pc["sharded.requests_per_shard"] == [2, 4]
+    assert pc["sharded.completed"] == 6
 
 
 def test_shared_page_not_freed_while_another_request_reads_it():
@@ -434,11 +488,11 @@ def test_shared_page_not_freed_while_another_request_reads_it():
     (p,) = kv.alloc_on(0, 1)
     kv.write_page(p, np.full(kv.row_elems, 7.0), np.full(kv.row_elems, 7.0))
     a = Request(uid=0, prompt=[1], max_new_tokens=1, kv_pages=[p])
-    eng.submit(a)
+    eng.submit(SubmitRequest(request=a))
     # B shares page p but routes to shard 1, migrating p's contents away.
     b = Request(uid=1, prompt=[2], max_new_tokens=1,
                 kv_pages=[p] + kv.alloc_on(1, 2))
-    eng.submit(b)
+    eng.submit(SubmitRequest(request=b))
     # p is still read by A: it must NOT be back on the free list...
     assert p not in kv._free[0]
     # ...and its contents survive for A (migration copies, never zeroes).
@@ -467,7 +521,7 @@ def test_migration_hop_does_not_steal_serve_completion_events():
     # Request A completes on shard 1 but is deliberately NOT polled yet.
     a = Request(uid=0, prompt=[1], max_new_tokens=1,
                 kv_pages=kv.alloc_on(1, 1))
-    eng.submit(a)
+    eng.submit(SubmitRequest(request=a))
     for _ in range(10):
         eng.step()
         if 0 in eng.engines[1].completed:
@@ -477,7 +531,7 @@ def test_migration_hop_does_not_steal_serve_completion_events():
     # which drains shard 1's runtime before A's writeback was polled.
     b = Request(uid=1, prompt=[2], max_new_tokens=1,
                 kv_pages=kv.alloc_on(0, 1) + kv.alloc_on(1, 2))
-    assert eng.submit(b) == 1
+    assert eng.submit(SubmitRequest(request=b)).shard == 1
     assert eng.migration.hops == 1
     # A's completion must still be observable through the poll path.
     delivered = {r.uid for r in eng.poll_completed()}
@@ -505,8 +559,9 @@ def test_sharded_serve_without_kv_pool_routes_round_robin():
                              max_len=16)
     # kv_pages without a pool must not crash: ownership is unknowable, so
     # the router falls back to round-robin.
-    shards = [eng.submit(Request(uid=u, prompt=[1], max_new_tokens=1,
-                                 kv_pages=[3] if u == 1 else None))
+    shards = [eng.submit(SubmitRequest(request=Request(
+                  uid=u, prompt=[1], max_new_tokens=1,
+                  kv_pages=[3] if u == 1 else None))).shard
               for u in range(4)]
     assert shards == [0, 1, 0, 1]
     assert eng.remote_page_reads == 0

@@ -19,7 +19,7 @@ from repro.core.speculation import (
     static_depth,
 )
 from repro.perf.workloads import Scale, generate
-from repro.runtime import ChannelConfig, DMARuntime, coalesce
+from repro.runtime import ChannelConfig, DMARuntime, SubmitRequest, coalesce
 
 TINY = Scale("tiny", n_bursts=1, burst_len=24, pool_elems=1 << 12,
              max_len=128, ring_capacity=64, sim_transfers=60)
@@ -163,7 +163,8 @@ def test_fixed_policy_runtime_identical_on_registry_configs(arch):
             rt.register_pool("src", jnp.zeros(TINY.pool_elems, jnp.float32))
             rt.register_pool("dst", jnp.zeros(TINY.pool_elems, jnp.float32))
             for d in wl.chains:
-                rt.submit(d, src_pool="src", dst_pool="dst", channel="a")
+                rt.submit(SubmitRequest(chain=d, src_pool="src",
+                                        dst_pool="dst", channel="a"))
             rt.drain_until_idle()
             st = rt.stats()
             stats.append((st["coalesce_merge_ratio"],

@@ -12,6 +12,7 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_config
 from repro.data import DataConfig, DataIterator, IteratorState, make_batch
 from repro.models import init_params
+from repro.runtime import SubmitRequest
 from repro.serve import PagedKVCache, Request, ServeEngine
 
 
@@ -328,11 +329,12 @@ def test_serve_engine_continuous_batching_matches_reference():
     rng = np.random.default_rng(0)
     prompt = list(rng.integers(1, 500, 5))
     eng = ServeEngine(params, cfg, capacity=3, max_len=64)
-    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
-    eng.submit(Request(uid=1, prompt=list(rng.integers(1, 500, 3)),
-                       max_new_tokens=4))
-    eng.submit(Request(uid=2, prompt=list(rng.integers(1, 500, 7)),
-                       max_new_tokens=4))
+    eng.submit(SubmitRequest(request=Request(uid=0, prompt=prompt,
+                                             max_new_tokens=4)))
+    eng.submit(SubmitRequest(request=Request(
+        uid=1, prompt=list(rng.integers(1, 500, 3)), max_new_tokens=4)))
+    eng.submit(SubmitRequest(request=Request(
+        uid=2, prompt=list(rng.integers(1, 500, 7)), max_new_tokens=4)))
     done = eng.run(max_steps=100)
     assert sorted(done) == [0, 1, 2]
     assert len(eng.poll_completed()) == 3
@@ -356,12 +358,14 @@ def test_serve_engine_slot_reuse_is_clean():
     prompt = list(rng.integers(1, 500, 5))
     # Engine A: slot 0 used twice (uid 0 then uid 2).
     eng = ServeEngine(params, cfg, capacity=1, max_len=64)
-    eng.submit(Request(uid=0, prompt=list(rng.integers(1, 500, 9)),
-                       max_new_tokens=3))
-    eng.submit(Request(uid=2, prompt=prompt, max_new_tokens=3))
+    eng.submit(SubmitRequest(request=Request(
+        uid=0, prompt=list(rng.integers(1, 500, 9)), max_new_tokens=3)))
+    eng.submit(SubmitRequest(request=Request(uid=2, prompt=prompt,
+                                             max_new_tokens=3)))
     out_reused = eng.run(max_steps=200)[2].output
     # Engine B: fresh engine, same request.
     eng2 = ServeEngine(params, cfg, capacity=1, max_len=64)
-    eng2.submit(Request(uid=2, prompt=prompt, max_new_tokens=3))
+    eng2.submit(SubmitRequest(request=Request(uid=2, prompt=prompt,
+                                              max_new_tokens=3)))
     out_fresh = eng2.run(max_steps=100)[2].output
     assert out_reused == out_fresh

@@ -6,6 +6,7 @@ import numpy as np
 from repro import optim
 from repro.configs import get_config
 from repro.data import DataConfig
+from repro.runtime import SubmitRequest
 from repro.train import Trainer, TrainConfig, TrainerConfig
 
 
@@ -53,9 +54,9 @@ def test_serve_engine_mixed_archs_end_to_end():
         eng = ServeEngine(params, cfg, capacity=2, max_len=48)
         rng = np.random.default_rng(0)
         for uid in range(3):
-            eng.submit(Request(uid=uid,
-                               prompt=list(rng.integers(1, 400, 4)),
-                               max_new_tokens=3))
+            eng.submit(SubmitRequest(request=Request(
+                uid=uid, prompt=list(rng.integers(1, 400, 4)),
+                max_new_tokens=3)))
         done = eng.run(max_steps=200)
         assert sorted(done) == [0, 1, 2], arch
         assert all(len(r.output) == 3 for r in done.values()), arch

@@ -224,16 +224,19 @@ def test_runtime_submit_unified_returns_ticket_without_warning():
     assert len(done) == 1
 
 
-def test_runtime_legacy_keyword_submit_warns_and_still_works():
+def test_runtime_legacy_keyword_submit_raises_type_error():
     rt = _runtime()
-    with pytest.warns(DeprecationWarning, match="DMARuntime.submit"):
-        res = rt.submit(_chain(), src_pool="src", dst_pool="dst")
+    with pytest.raises(TypeError, match="DMARuntime.submit"):
+        rt.submit(_chain())
+    # The unified form still carries the same pools on the request.
+    res = rt.submit(SubmitRequest(chain=_chain(), src_pool="src",
+                                  dst_pool="dst"))
     assert isinstance(res, Ticket) and res.tickets
     rt.drain_until_idle()
     assert np.asarray(rt.pool("dst"))[2048 + 5] == 5.0
 
 
-def test_channel_submit_unified_and_legacy_forms():
+def test_channel_submit_requires_submit_request():
     rt = _runtime()
     ch = rt.channels["ch0"]
     d = _chain()
@@ -242,12 +245,11 @@ def test_channel_submit_unified_and_legacy_forms():
         t = ch.submit(SubmitRequest(chain=d, src_pool="src",
                                     dst_pool="dst"), [101, 102])
     assert isinstance(t, Ticket) and t.tickets == [101, 102]
-    with pytest.warns(DeprecationWarning, match="Channel.submit"):
-        slots = ch.submit(d, [103, 104], src_pool="src", dst_pool="dst")
-    assert isinstance(slots, list) and len(slots) == 2
+    with pytest.raises(TypeError, match="Channel.submit"):
+        ch.submit(d, [103, 104])
 
 
-def test_serve_engine_submit_unified_and_legacy_forms():
+def test_serve_engine_submit_requires_submit_request():
     from repro.serve import Request, ServeEngine
 
     cfg = get_config("mamba2-780m", reduced=True)
@@ -259,9 +261,10 @@ def test_serve_engine_submit_unified_and_legacy_forms():
         t = eng.submit(SubmitRequest(request=Request(
             uid=0, prompt=[1, 2, 3], max_new_tokens=2)))
     assert isinstance(t, Ticket) and t.uid == 0
-    with pytest.warns(DeprecationWarning, match="ServeEngine.submit"):
-        assert eng.submit(Request(uid=1, prompt=[1, 2],
-                                  max_new_tokens=2)) is None
+    bare = Request(uid=1, prompt=[1, 2], max_new_tokens=2)
+    with pytest.raises(TypeError, match="ServeEngine.submit"):
+        eng.submit(bare)
+    eng.submit(SubmitRequest(request=bare))
     with pytest.raises(ValueError, match="request"):
         eng.submit(SubmitRequest(chain=_chain()))
     done = eng.run(max_steps=200)
@@ -269,15 +272,16 @@ def test_serve_engine_submit_unified_and_legacy_forms():
 
     pc = eng.perf_counters()
     assert pc["serve.completed"] == 2
-    # Legacy bare keys resolve through DeprecationWarning aliases…
-    with pytest.warns(DeprecationWarning, match="completed"):
-        assert pc["completed"] == 2
-    # …but iteration and JSON see only the canonical dotted namespace.
-    assert "completed" not in set(pc)
+    # The bare-key DeprecationWarning aliases are gone: a legacy key is a
+    # plain KeyError, and iteration/JSON see only the dotted namespace.
+    with pytest.raises(KeyError):
+        pc["completed"]
+    assert pc.get("completed") is None
+    assert "completed" not in pc
     assert all("." in k or k == "translation" for k in pc)
 
 
-def test_sharded_serve_submit_unified_and_legacy_forms():
+def test_sharded_serve_submit_requires_submit_request():
     from repro.distributed.sharded_runtime import (
         ShardedDMARuntime,
         ShardedKVPool,
@@ -298,17 +302,19 @@ def test_sharded_serve_submit_unified_and_legacy_forms():
             uid=0, prompt=[1, 2], max_new_tokens=2,
             kv_pages=kv.alloc_on(1, 2))))
     assert isinstance(t, Ticket) and t.shard == 1 and t.uid == 0
-    with pytest.warns(DeprecationWarning, match="ShardedServeEngine.submit"):
-        shard = eng.submit(Request(uid=1, prompt=[3], max_new_tokens=2,
-                                   kv_pages=kv.alloc_on(0, 2)))
-    assert shard == 0                           # legacy return type: int
+    bare = Request(uid=1, prompt=[3], max_new_tokens=2)
+    with pytest.raises(TypeError, match="ShardedServeEngine.submit"):
+        eng.submit(bare)
+    t2 = eng.submit(SubmitRequest(request=Request(
+        uid=1, prompt=[3], max_new_tokens=2, kv_pages=kv.alloc_on(0, 2))))
+    assert t2.shard == 0
     done = eng.run(max_steps=200)
     assert sorted(done) == [0, 1]
     pc = eng.perf_counters()
     assert pc["sharded.completed"] == 2
     assert pc["sharded.requests_per_shard"] == [1, 1]
-    with pytest.warns(DeprecationWarning):
-        assert pc["requests_per_shard"] == [1, 1]
+    with pytest.raises(KeyError):
+        pc["requests_per_shard"]
 
 
 def test_priority_submission_takes_emptiest_eligible_channel():

@@ -1,13 +1,14 @@
 #!/usr/bin/env python
-"""Deprecation-shim lint: no internal legacy ``.submit(...)`` call sites.
+"""Legacy-submit lint: the removed keyword forms must not come back.
 
 The unified submit contract (DESIGN.md §9) routes every submission —
 ``Channel.submit``, ``DMARuntime.submit``, ``ServeEngine.submit``,
 ``ShardedServeEngine.submit`` — through one ``SubmitRequest`` value. The
-legacy keyword forms still work behind deprecation shims for one release,
-but only for *external* callers: first-party code (``src/``,
-``benchmarks/``, ``examples/``) must not lean on its own shims, or the
-removal release breaks the repo itself.
+legacy keyword forms shipped behind deprecation shims for one release
+after 0.4 and were then removed; every layer now raises ``TypeError``
+on a non-``SubmitRequest`` first argument. This lint keeps the removal
+honest: any resurrected legacy call site — or a reintroduction of the
+shim machinery itself (``warn_legacy_submit``) — fails CI.
 
 A call site is flagged when its first argument is not a
 ``SubmitRequest(...)`` literal AND the call window shows a legacy shape:
@@ -20,8 +21,9 @@ A call site is flagged when its first argument is not a
 Calls that forward an existing ``SubmitRequest`` variable (for example the
 scheduler handing a request down to a channel with extra positional
 arguments) are fine — the lint keys on legacy *shape*, not on requiring a
-literal. ``tests/`` is exempt: the shim tests exist to pin the legacy
-forms until removal.
+literal. ``tests/`` is scanned too now that the shims are gone: the old
+shim-pinning tests were rewritten against the TypeError contract, so any
+legacy form in tests is a regression, not a pin.
 
 Usage: python tools/lint_submit_api.py [--root DIR]
 Exit status 1 if any legacy call site is found (the CI lint job's gate).
@@ -35,9 +37,12 @@ import re
 import sys
 import tokenize
 
-SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+SCAN_DIRS = ("src/repro", "benchmarks", "examples", "tests")
 LEGACY_KWARGS = ("src_pool=", "dst_pool=", "tier=", "on_complete=",
                  "run_coalescer=")
+#: Identifiers of the removed shim machinery; any appearance in scanned
+#: code (strings/comments excluded) means the one-release shims grew back.
+BANNED_IDENTIFIERS = ("warn_legacy_submit", "extra_aliases")
 CALL = re.compile(r"\.submit\(")
 
 
@@ -91,6 +96,12 @@ def _blank_strings_and_comments(text: str) -> str:
 def lint_file(path: pathlib.Path) -> list:
     text = _blank_strings_and_comments(path.read_text())
     findings = []
+    for ident in BANNED_IDENTIFIERS:
+        for m in re.finditer(rf"\b{ident}\b", text):
+            line = text.count("\n", 0, m.start()) + 1
+            findings.append((line, f"removed shim identifier {ident!r} — "
+                                   "the legacy submit shims are gone for "
+                                   "good"))
     for m in CALL.finditer(text):
         window = _call_window(text, m.end() - 1)
         first_arg = window.lstrip()
