@@ -89,7 +89,7 @@ def _bench_translation(n_desc: int = 256, warm_rounds: int = 5,
         "descriptors_per_submit": n_desc,
         "warm_rounds": warm_rounds,
         "translation_enabled": translation,
-        "counters": rt._translation_stats_raw(),
+        "counters": dict(rt.translation_stats()),
         "wall_clock": {
             "cold_dispatch_us_per_descriptor": float(cold),
             "warm_dispatch_us_mean": float(np.mean(warm)),

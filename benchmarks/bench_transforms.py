@@ -73,14 +73,14 @@ def _runtime_ab(seed: int, *, n_chains: int = 8, n_segments: int = 6,
     oracle_code_err = float(np.max(
         np.abs(int8[moved] - oracle[src_idx]) / np.maximum(step, 1e-12),
         initial=0.0))
-    st = rt._translation_stats_raw()
+    st = rt.translation_stats()
     return {
         "fidelity_max_rel_err": err,
         "oracle_elems_checked": int(moved.sum()),
         "oracle_code_err": oracle_code_err,
         "transform_fusion_hit_rate":
-            float(st["transform_fusion_hit_rate"]),
-        "transform_lookups": int(st["transform_lookups"]),
+            float(st["translation.transform_fusion_hit_rate"]),
+        "transform_lookups": int(st["translation.transform_lookups"]),
     }
 
 

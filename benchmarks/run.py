@@ -110,6 +110,11 @@ def main(argv=None) -> int:
                          "path everywhere (runtime benches and the perf "
                          "sweep); the resulting BENCH_perf.json records "
                          "translation_cache_enabled=false")
+    ap.add_argument("--no-iotlb", action="store_true",
+                    help="escape hatch: drop the MMU/IOTLB cells from the "
+                         "perf sweep (physical addressing only, as before "
+                         "schema v8); the resulting BENCH_perf.json "
+                         "records iotlb_enabled=false")
     ap.add_argument("--out-dir", type=pathlib.Path, default=REPO_ROOT,
                     help="where to write BENCH_*.json")
     args = ap.parse_args(argv)
@@ -167,7 +172,8 @@ def main(argv=None) -> int:
         from repro.perf.sweep import default_spec, run_sweep, write_doc
         perf_out = args.out_dir / "BENCH_perf.json"
         doc = run_sweep(default_spec(args.perf_mode, args.seed,
-                                     translation=translation))
+                                     translation=translation,
+                                     iotlb=not args.no_iotlb))
         write_doc(doc, str(perf_out))
         print(f"wrote {perf_out}: {len(doc['cells'])} cells "
               f"(mode={args.perf_mode}, seed={args.seed})")

@@ -32,12 +32,18 @@ from typing import List, Optional, Sequence
 #: the tracing-off path).
 DRIFT_METRICS = ("launch_us_per_descriptor_mean", "warm_dispatch_us_mean",
                  "tracing_off_overhead_ratio", "resize_mesh4_seconds",
-                 "migration_overlap_ratio_mesh4")
+                 "migration_overlap_ratio_mesh4", "tlb_hit_rate_L13",
+                 "first_touch_latency_rounds_mesh4")
 #: Metrics where *higher* is better: the drift check inverts for these,
 #: alerting when recent points all fall DRIFT_FACTOR *below* the trailing
 #: median. ``migration_overlap_ratio_mesh4`` is deterministic (DESIGN.md
-#: §10), so a sustained drop is a real fabric-scheduling regression.
-HIGHER_IS_BETTER = frozenset({"migration_overlap_ratio_mesh4"})
+#: §10) and so are the two virtual-addressing series (DESIGN.md §11):
+#: ``tlb_hit_rate_L13`` (IOTLB hit rate of the DDR3 MMU cell — a drop
+#: means translation prefetch detached from the §II-C stream) and
+#: ``first_touch_latency_rounds_mesh4`` (fabric rounds from ownership
+#: flip to residency — a rise means lazy pulls stopped being lazy).
+HIGHER_IS_BETTER = frozenset({"migration_overlap_ratio_mesh4",
+                              "tlb_hit_rate_L13"})
 #: Headline metric echoed when a point is appended.
 DRIFT_METRIC = DRIFT_METRICS[0]
 #: Alert when the newest point exceeds the median of the trailing window

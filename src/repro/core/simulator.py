@@ -47,9 +47,12 @@ import dataclasses
 import numbers
 import warnings
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:  # layering: core never imports mmu at module load
+    from repro.mmu.iotlb import IOTLBParams
 
 from .speculation import (
     DEFAULT_DEPTH,
@@ -98,6 +101,11 @@ class SimConfig:
     prefetch: PolicyLike = FixedDepth(0)  # speculation policy (depth API)
     logicore: bool = False     # behavioural LogiCORE IP DMA model
     translated: bool = False   # chain pre-lowered by the translation cache
+    # MMU-aware mode (DESIGN.md §11): when set, payload launches must
+    # translate their page through an engine-side IOTLB — walk stalls on
+    # misses, translation prefetches riding the speculative descriptor
+    # stream. ``None`` (default) is bit-for-bit the pre-MMU simulator.
+    iotlb: Optional["IOTLBParams"] = None
 
     def __post_init__(self):
         # The speculation-policy layer is the single depth API: a bare int
@@ -180,6 +188,11 @@ class SimResult:
     # Speculation-policy trajectory (constant for FixedDepth frontends).
     final_depth: int = 0
     mean_depth: float = 0.0
+    # IOTLB metrics (DESIGN.md §11); all zero when SimConfig.iotlb is None.
+    tlb_hits: int = 0
+    tlb_misses: int = 0
+    tlb_hit_rate: float = 0.0
+    walk_stall_cycles: float = 0.0
 
 
 class _Bus:
@@ -214,6 +227,23 @@ def _simulate_ours(
     depth_sum, depth_n = cur_depth, 1    # trajectory stats (per window)
     window_hits = window_n = 0           # the frontend's own measurement
 
+    # MMU-aware mode (DESIGN.md §11): payload launches translate their
+    # page through the IOTLB; translation prefetches ride the speculative
+    # descriptor stream under their own lookahead policy. One page per
+    # descriptor (the paged-KV shape: page == transfer unit).
+    tlb = tlb_ctrl = None
+    tlb_depth = 0
+    tlb_window_h = tlb_window_n = 0
+    pages = None
+    far_page = 2 * num_transfers         # spec-miss jump target stream
+    pred_next_page = 1                   # chain-lookahead prediction anchor
+    if cfg.iotlb is not None:
+        from repro.mmu.iotlb import IOTLB
+        tlb = IOTLB(cfg.iotlb, mem_latency=mem_latency)
+        tlb_ctrl = as_policy(cfg.iotlb.prefetch).make_controller()
+        tlb_depth = tlb_ctrl.depth
+        pages = np.zeros(num_transfers, np.int64)
+
     next_known = np.zeros(num_transfers)   # cycle `next` field arrives
     desc_end = np.zeros(num_transfers)     # cycle descriptor fully arrived
     payload_end = np.zeros(num_transfers)
@@ -242,17 +272,41 @@ def _simulate_ours(
         out "with sequential addresses" as soon as a slot is available), so
         the issue time follows the previous issue, not data arrival.
         """
-        nonlocal last_spec_issue, last_spec_pos
+        nonlocal last_spec_issue, last_spec_pos, pred_next_page
         while (len(spec_queue) < cur_depth
                and last_spec_pos + 1 < num_transfers
                and (last_spec_pos + 1) - committed <= cfg.in_flight):
             pos = last_spec_pos + 1
             t_issue = max(last_spec_issue + 1, now)
+            if tlb is not None and len(spec_queue) < tlb_depth:
+                # Chain-lookahead translation prefetch (arXiv 1808.09751):
+                # the speculative fetch's predicted sequential page starts
+                # its walk the cycle the fetch issues.
+                tlb.prefetch(pred_next_page, t_issue)
+            pred_next_page += 1
             nk, end = issue_desc(pos, t_issue)
             spec_queue.append((pos, t_issue, nk, end))
             last_spec_issue, last_spec_pos = t_issue, pos
 
-    # Descriptor 0: its address came from the CSR write (always known).
+    def launch_payload(idx: int):
+        """Payload launch for committed descriptor ``idx``: in MMU mode
+        the launch first translates its page; a miss stalls the walk."""
+        nonlocal tlb_window_h, tlb_window_n, tlb_depth
+        t_launch = desc_end[idx] + 1
+        if tlb is not None:
+            before = tlb.hits
+            t_launch += tlb.access(int(pages[idx]), t_launch)
+            tlb_window_n += 1
+            tlb_window_h += int(tlb.hits > before)
+            if tlb_window_n >= DEPTH_WINDOW:
+                tlb_depth = tlb_ctrl.observe(tlb_window_h / tlb_window_n)
+                tlb_window_h = tlb_window_n = 0
+        _, payload_end[idx] = bus.fetch(t_launch, payload_beats_each)
+
+    # Descriptor 0: its address came from the CSR write (always known) —
+    # in MMU mode its translation walk starts just as early.
+    if tlb is not None and tlb_depth > 0:
+        tlb.prefetch(0, 0.0)
     nk, end = issue_desc(0, 0.0)
     next_known[0], desc_end[0] = nk, end
     if spec_on:
@@ -276,10 +330,11 @@ def _simulate_ours(
         if hit:
             pos, t_issue, nk, end = spec_queue.popleft()
             assert pos == k
+            if pages is not None:
+                pages[k] = pages[k - 1] + 1   # sequential: prediction held
             next_known[k] = max(nk, next_known[k - 1])
             desc_end[k] = max(end, next_known[k - 1])
-            _, payload_end[k - 1] = bus.fetch(desc_end[k - 1] + 1,
-                                              payload_beats_each)
+            launch_payload(k - 1)
             # Commit frees a speculation slot.
             top_up_spec(next_known[k], committed=k + 1)
         else:
@@ -289,6 +344,16 @@ def _simulate_ours(
                 # the true fetch in the same cycle `next` arrived.
                 wasted_beats += OURS_DESC_BEATS * len(spec_queue)
                 spec_queue.clear()
+            if pages is not None:
+                if speculated:
+                    # The chain jumped: the true target is a far page the
+                    # lookahead never walked (prefetched predictions were
+                    # wasted walker work, like wasted descriptor beats).
+                    pages[k] = far_page
+                    far_page += num_transfers
+                else:
+                    pages[k] = pages[k - 1] + 1
+                pred_next_page = pages[k] + 1
             t_issue = next_known[k - 1]
             nk, end = issue_desc(k, t_issue)
             next_known[k], desc_end[k] = nk, end
@@ -296,8 +361,7 @@ def _simulate_ours(
                 # Speculation restarts from the re-fetched address.
                 last_spec_issue, last_spec_pos = t_issue, k
                 top_up_spec(t_issue + 1, committed=k)
-            _, payload_end[k - 1] = bus.fetch(desc_end[k - 1] + 1,
-                                              payload_beats_each)
+            launch_payload(k - 1)
         if window_n >= DEPTH_WINDOW:
             # Chain boundary: the measured window feeds the policy. A new
             # depth only affects future top-ups — fetches already
@@ -307,8 +371,7 @@ def _simulate_ours(
             depth_n += 1
             window_hits = window_n = 0
 
-    _, payload_end[num_transfers - 1] = bus.fetch(
-        desc_end[num_transfers - 1] + 1, payload_beats_each)
+    launch_payload(num_transfers - 1)
 
     lo, hi = num_transfers // 4, 3 * num_transfers // 4
     window_cycles = payload_end[hi] - payload_end[lo]
@@ -325,6 +388,11 @@ def _simulate_ours(
         # Table IV probes single-transfer latency: the uncongested first fetch.
         rf_rb=float(rf_rb_first), i_rf=OURS_I_RF, r_w=R_W,
         final_depth=cur_depth, mean_depth=depth_sum / depth_n,
+        tlb_hits=tlb.hits if tlb is not None else 0,
+        tlb_misses=tlb.misses if tlb is not None else 0,
+        tlb_hit_rate=tlb.hit_rate if tlb is not None else 0.0,
+        walk_stall_cycles=float(tlb.walk_stall_cycles)
+        if tlb is not None else 0.0,
     )
 
 

@@ -289,6 +289,43 @@ class RebalancePlanner:
         a free page.  The caller owns reference rewriting and releasing
         the vacated source pages.
         """
+        picked = self._select(kv, active, exclude)
+        if picked is None:
+            return None
+        src, shard_of = picked
+        dst: List[int] = []
+        for p, s in zip(src, shard_of):
+            dst.extend(kv.alloc_on(s, 1))
+            # The heat moves with the content: future samples re-heat the
+            # destination pages, so one hot set is never re-planned.
+            self.page_heat.pop(p, None)
+        self.plans_emitted += 1
+        self.pages_planned += len(src)
+        return src, dst
+
+    def plan_ownership(self, kv, active: Optional[Sequence[bool]] = None,
+                       exclude: Sequence[int] = ()) -> Optional[
+                           Tuple[List[int], List[int]]]:
+        """Ownership-first variant of :meth:`plan` (DESIGN.md §11): same
+        candidate selection, but returns ``(pages, dst_shards)`` with
+        *no destination allocation* — the caller flips the ownership
+        table (``kv.flip_ownership``) and page contents pull lazily on
+        first touch, so the rebalance decision takes effect in O(table
+        write) instead of O(synchronous batch migration)."""
+        picked = self._select(kv, active, exclude)
+        if picked is None:
+            return None
+        src, shard_of = picked
+        for p in src:
+            self.page_heat.pop(p, None)
+        self.plans_emitted += 1
+        self.pages_planned += len(src)
+        return src, shard_of
+
+    def _select(self, kv, active, exclude) -> Optional[
+            Tuple[List[int], List[int]]]:
+        """Greedy hot-page pick shared by both plan flavors: returns
+        ``(pages, receiver_shards)`` before any allocation/heat pop."""
         if not self.should_rebalance():
             return None
         loads = self.windowed_load()
@@ -301,7 +338,7 @@ class RebalancePlanner:
         candidates = sorted(
             (p for p, h in self.page_heat.items()
              if h > 0.0 and p not in banned
-             and kv.owner.owner(p) == hot),
+             and kv.owner_of(p) == hot),
             key=lambda p: (-self.page_heat[p], p))
         receivers = [s for s in alive if s != hot]
         proj = {s: loads[s] for s in receivers}
@@ -328,15 +365,7 @@ class RebalancePlanner:
             free[s] -= 1
         if not src:
             return None
-        dst: List[int] = []
-        for p, s in zip(src, shard_of):
-            dst.extend(kv.alloc_on(s, 1))
-            # The heat moves with the content: future samples re-heat the
-            # destination pages, so one hot set is never re-planned.
-            self.page_heat.pop(p, None)
-        self.plans_emitted += 1
-        self.pages_planned += len(src)
-        return src, dst
+        return src, shard_of
 
     def placement(self, kv, pages: Sequence[int],
                   survivors: Sequence[int]) -> List[int]:

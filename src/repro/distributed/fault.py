@@ -132,8 +132,9 @@ def ungraceful_resize(kv, lost_shard: int, *,
             t.staged = {name: srt._place(target, arr)
                         for name, arr in t.staged.items()}
         t.dst_shard = target
-        t.rows_d = np.asarray([kv.owner.local_row(p) for p in new_pages],
-                              np.int64)
+        t.rows_d = np.asarray(
+            [kv.owner.local_row(kv.table.slot_of(int(p)))
+             for p in new_pages], np.int64)
         ctrl = srt.shards[target].submit_control(payload=t.src_shard,
                                                  channel="completion")
         t.ctrl_ticket = ctrl.tickets[-1]

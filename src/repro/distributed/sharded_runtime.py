@@ -43,7 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chain import from_segments
+from repro.core.pageref import PageRef, as_pagerefs
 from repro.core.prefetch import estimate_hit_rate
+from repro.mmu import PageTable
 from repro.obs.counters import PerfCounters, namespaced
 from repro.obs.metrics import Histogram
 from repro.obs.trace import Tracer, monotonic
@@ -827,6 +829,19 @@ class ShardedKVPool:
     runs — the source of ``migration_chain_merge_ratio``. Page allocation
     is shard-aware: :meth:`alloc_on` hands out pages *owned by* a given
     shard, which is how the serve router keeps a request's pages local.
+
+    Virtual addressing (DESIGN.md §11): callers hold :class:`PageRef`
+    handles naming *virtual* pages; a :class:`repro.mmu.PageTable` maps
+    them to (shard, physical slot). Two consequences:
+
+    * ``defragment(mode="remap")`` renumbers live pages onto dense
+      virtual ids without moving a byte (the §II-C speculator sees a
+      sequential virtual chain);
+    * :meth:`flip_ownership` moves a page's *owner* immediately and
+      leaves the contents behind — the first touch (:meth:`ensure_resident`,
+      called by every contents accessor) pulls them lazily through the
+      normal migration path. Static ``owner`` still partitions *slots*;
+      the table partitions *pages*.
     """
 
     POOL_K = "kv.k"
@@ -847,12 +862,41 @@ class ShardedKVPool:
         self._free: List[List[int]] = [
             sorted(self.owner.shard_pages(s))
             for s in range(runtime.num_shards)]
+        # Virtual layer: vpage -> (shard, slot), plus which vids are
+        # handed out. Identity until the first remap/flip, so legacy
+        # int-addressed flows are bit-for-bit unchanged.
+        self.table = PageTable(num_pages, runtime.num_shards)
+        self._vused = np.zeros(num_pages, bool)
+        self.first_touch_pulls = 0
 
     # -- allocation ----------------------------------------------------------
     def free_pages_on(self, shard: int) -> int:
         return len(self._free[shard])
 
-    def alloc_on(self, shard: int, n: int) -> List[int]:
+    def refs(self, pages: Sequence[int]) -> List[PageRef]:
+        """Mint :class:`PageRef` handles for virtual ids (the blessed
+        conversion for internal code that computes ids numerically —
+        bare ints through the public APIs are deprecated)."""
+        return [PageRef(int(p), self.table.page_generation(int(p)))
+                for p in pages]
+
+    def owner_of(self, page) -> int:
+        """Current owning shard of a virtual page (page-table truth —
+        unlike ``owner.owner``, this follows :meth:`flip_ownership`)."""
+        return self.table.shard_of(int(page))
+
+    def _claim_vid(self, phys: int) -> PageRef:
+        """Claim a virtual id for physical slot ``phys``: identity when
+        the identity vid is free, else the lowest unused vid (remapped)."""
+        shard = self.owner.owner(phys)
+        vid = phys if not self._vused[phys] else int(
+            np.flatnonzero(~self._vused)[0])
+        self._vused[vid] = True
+        if self.table.map(vid) != (shard, phys):
+            self.table.remap(vid, shard, phys)
+        return PageRef(vid, self.table.page_generation(vid))
+
+    def alloc_on(self, shard: int, n: int) -> List[PageRef]:
         """Lowest-id free pages owned by ``shard`` (sequential preference:
         consecutive ids keep the §II-C speculator hitting)."""
         if not self.rt.active[shard]:
@@ -862,23 +906,88 @@ class ShardedKVPool:
         if n > len(free):
             raise RuntimeError(
                 f"shard {shard}: need {n} pages, have {len(free)}")
-        out, self._free[shard] = free[:n], free[n:]
-        return out
+        phys, self._free[shard] = free[:n], free[n:]
+        return [self._claim_vid(p) for p in phys]
 
     def release(self, pages: Sequence[int]) -> None:
+        refs = as_pagerefs(pages, api="ShardedKVPool.release")
         touched = set()
-        for p in pages:
-            s = self.owner.owner(int(p))
-            self._free[s].append(int(p))
+        for r in refs:
+            v = int(r)
+            s, slot = self.table.home_of(v)
+            if self.table.is_pending(v):
+                # Freeing an unpulled page drops the flip: the contents'
+                # home slot is what actually returns to a free list.
+                self.table.remap(v, s, slot)
+            self._free[s].append(int(slot))
+            self._vused[v] = False
             touched.add(s)
         for s in touched:
             self._free[s].sort()
 
+    # -- translation / residency ---------------------------------------------
+    def _locate(self, vpage: int) -> Tuple[int, int]:
+        """(shard, slot) for a *resident* virtual page."""
+        self.ensure_resident([vpage])
+        return self.table.map(int(vpage))
+
+    def ensure_resident(self, pages: Sequence[int], *,
+                        priority: int = 0) -> int:
+        """First-touch pull: materialize any ownership-flipped pages on
+        their (new) owner through the normal migration path, then free
+        the vacated home slots. Returns the number of pages pulled.
+
+        This is the lazy half of ownership-first migration: a flip is a
+        table write; the bytes only move when someone touches the page.
+        Each pull is a single-page migration, so the first-touch cost is
+        bounded by one page's hop latency — not the full batch.
+        """
+        pending = list(dict.fromkeys(
+            int(p) for p in pages if self.table.is_pending(int(p))))
+        if not pending:
+            return 0
+        moves = []
+        for v in pending:
+            hs, hslot = self.table.home_of(v)
+            dshard = self.table.shard_of(v)
+            free = self._free[dshard]
+            if not free:
+                raise RuntimeError(
+                    f"shard {dshard}: no free slot to pull vpage {v} into")
+            moves.append((v, hs, hslot, free.pop(0)))
+        self.rt.migrate_rows(
+            (self.POOL_K, self.POOL_V),
+            [m[2] for m in moves], [m[3] for m in moves],
+            priority=priority)
+        for v, hs, hslot, slot in moves:
+            self.table.complete_pull(v, slot)
+            self._free[hs].append(hslot)
+        for hs in {m[1] for m in moves}:
+            self._free[hs].sort()
+        self.first_touch_pulls += len(moves)
+        return len(moves)
+
+    def flip_ownership(self, pages: Sequence[int],
+                       shard: int) -> List[PageRef]:
+        """Ownership-first migration: the pages belong to ``shard`` *now*
+        (routing, admission, and ``owner_of`` all see the flip
+        immediately); their contents stay put until first touch. Returns
+        refreshed refs (the flip bumps each page's generation)."""
+        if not self.rt.active[shard]:
+            raise RuntimeError(f"shard {shard} is not in the mesh")
+        refs = as_pagerefs(pages, api="ShardedKVPool.flip_ownership")
+        for r in refs:
+            v = int(r)
+            if self.table.shard_of(v) != int(shard):
+                self.table.flip_owner(v, int(shard))
+        return self.refs(refs)
+
     # -- contents (host-side oracle / writers) -------------------------------
     def write_page(self, page: int, k_row: np.ndarray,
                    v_row: np.ndarray) -> None:
-        s = self.owner.owner(page)
-        lo = self.owner.local_row(page) * self.row_elems
+        (ref,) = as_pagerefs([page], api="ShardedKVPool.write_page")
+        s, slot = self._locate(int(ref))
+        lo = self.owner.local_row(slot) * self.row_elems
         rt = self.rt.shards[s]
         for name, row in ((self.POOL_K, k_row), (self.POOL_V, v_row)):
             arr = rt.pool(name)
@@ -887,10 +996,12 @@ class ShardedKVPool:
 
     def page_rows(self, pages: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
         """(K, V) rows for ``pages``, gathered host-side (test oracle)."""
+        refs = as_pagerefs(pages, api="ShardedKVPool.page_rows")
+        self.ensure_resident(refs)
         ks, vs = [], []
-        for p in pages:
-            s = self.owner.owner(int(p))
-            lo = self.owner.local_row(int(p)) * self.row_elems
+        for p in refs:
+            s, slot = self.table.map(int(p))
+            lo = self.owner.local_row(slot) * self.row_elems
             ks.append(np.asarray(
                 self.rt.pool_shard(self.POOL_K, s)[lo:lo + self.row_elems]))
             vs.append(np.asarray(
@@ -903,10 +1014,17 @@ class ShardedKVPool:
                    dst_pages: Sequence[int], *,
                    priority: int = 0,
                    drain: bool = True) -> MigrationStats:
-        """Relocate page contents through the sharded runtime: local moves
-        stay on the owner's channels, cross-owner moves become hops."""
+        """Relocate page *contents* between virtual pages through the
+        sharded runtime: local moves stay on the owner's channels,
+        cross-owner moves become hops. Pages are addressed physically
+        via the page table (pending pages are pulled resident first)."""
+        src = as_pagerefs(src_pages, api="ShardedKVPool.move_pages")
+        dst = as_pagerefs(dst_pages, api="ShardedKVPool.move_pages")
+        self.ensure_resident(list(src) + list(dst), priority=priority)
         return self.rt.migrate_rows(
-            (self.POOL_K, self.POOL_V), src_pages, dst_pages,
+            (self.POOL_K, self.POOL_V),
+            [self.table.slot_of(int(p)) for p in src],
+            [self.table.slot_of(int(p)) for p in dst],
             priority=priority, drain=drain)
 
     # -- elastic mesh resize (DESIGN.md §10) ---------------------------------
@@ -934,6 +1052,12 @@ class ShardedKVPool:
         if live:
             srt.migrate_rows((self.POOL_K, self.POOL_V), live, new,
                              priority=priority)
+            # The page table follows the physical relocation, so every
+            # PageRef naming an evacuated slot stays valid across the
+            # resize (pending pages' pull homes follow too).
+            self.table.rehome_slots(
+                {o: (self.owner.owner(nw), nw)
+                 for o, nw in zip(live, new)})
         self._free[shard] = []
         srt.set_active(shard, False)
         return dict(zip(live, new))
@@ -944,30 +1068,63 @@ class ShardedKVPool:
         self.rt.set_active(shard, True)
         self._free[shard] = sorted(self.owner.shard_pages(shard))
 
-    def defragment(self, pages: Sequence[int]) -> Tuple[List[int],
-                                                        MigrationStats,
-                                                        float]:
+    def defragment(self, pages: Sequence[int], *,
+                   mode: str = "remap") -> Tuple[List[PageRef],
+                                                 MigrationStats,
+                                                 float]:
         """Compact a page list onto the lowest free ids (possibly on other
         shards) and return ``(new_pages, stats, new_hit_rate)``.
 
-        The physical copy is descriptor work through the runtime; the
-        freed source pages return to their owners' free lists afterwards.
+        ``mode="remap"`` (default): the live pages keep their physical
+        slots and are *renumbered* onto dense virtual ids — page-table
+        writes only, no descriptor chain, empty ``MigrationStats``.
+        ``mode="copy"`` is the legacy physical compaction (descriptor
+        work through the runtime; the freed source slots return to their
+        owners' free lists). Both modes leave identical logical contents
+        under the returned refs — the ``tests/test_mmu.py`` oracle.
         """
-        pages = [int(p) for p in pages]
-        n = len(pages)
+        if mode not in ("remap", "copy"):
+            raise ValueError(f"mode must be 'remap' or 'copy', got {mode!r}")
+        refs = as_pagerefs(pages, api="ShardedKVPool.defragment")
+        n = len(refs)
         if n == 0:
             return [], MigrationStats(), 1.0
+        self.ensure_resident(refs)
         free_all = sorted(p for free in self._free for p in free)
+        if mode == "remap":
+            # Dense virtual ids: lowest free-slot ids whose vids are
+            # unclaimed (identical to the copy-mode ids while the table
+            # is identity), topped up from the unclaimed-vid pool.
+            cand = [p for p in free_all if not self._vused[p]]
+            if len(cand) < n:
+                have = set(cand)
+                cand += [int(v) for v in np.flatnonzero(~self._vused)
+                         if int(v) not in have]
+            if len(cand) < n:
+                raise RuntimeError(f"defragment: need {n} free virtual "
+                                   f"ids, have {len(cand)}")
+            new = cand[:n]
+            for nv, ov in zip(new, refs):
+                s, slot = self.table.map(int(ov))
+                self.table.remap(nv, s, slot)
+                self._vused[nv] = True
+                self._vused[int(ov)] = False
+            rate = estimate_hit_rate(np.asarray(new, np.int64) * 32)
+            return self.refs(new), MigrationStats(), rate
         if len(free_all) < n:
             raise RuntimeError(f"defragment: need {n} free pages, "
                                f"have {len(free_all)}")
-        new = free_all[:n]
-        for p in new:
+        new_phys = free_all[:n]
+        for p in new_phys:
             self._free[self.owner.owner(p)].remove(p)
-        stats = self.move_pages(pages, new)
-        self.release(pages)
-        rate = estimate_hit_rate(np.asarray(new, np.int64) * 32)
-        return new, stats, rate
+        stats = self.rt.migrate_rows(
+            (self.POOL_K, self.POOL_V),
+            [self.table.slot_of(int(ov)) for ov in refs], new_phys)
+        self.release(refs)
+        out = [self._claim_vid(p) for p in new_phys]
+        rate = estimate_hit_rate(np.asarray([int(p) for p in out],
+                                            np.int64) * 32)
+        return out, stats, rate
 
 
 class ShardedServeEngine:
@@ -1014,7 +1171,9 @@ class ShardedServeEngine:
             return uid % self.rt.num_shards
         counts = np.zeros(self.rt.num_shards, np.int64)
         for p in kv_pages:
-            counts[self.kv.owner.owner(int(p))] += 1
+            # Page-table truth: an ownership flip re-routes immediately,
+            # before any byte of the page has moved.
+            counts[self.kv.owner_of(p)] += 1
         return int(np.argmax(counts))   # argmax ties -> lowest shard
 
     def submit(self, req):
@@ -1037,12 +1196,16 @@ class ShardedServeEngine:
 
     def _admit(self, req, on_complete=None) -> Ticket:
         kv_pages = list(getattr(req, "kv_pages", None) or [])
+        if kv_pages and self.kv is not None:
+            # Request.kv_pages is a PageRef surface; the shim coerces
+            # bare ints (one DeprecationWarning per request).
+            kv_pages = list(as_pagerefs(kv_pages, api="Request.kv_pages"))
         shard = self._route(req.uid, kv_pages)
         if kv_pages and self.kv is not None:
             # Dedupe: a page listed twice still migrates (and frees) once.
             remote = list(dict.fromkeys(
                 p for p in kv_pages
-                if self.kv.owner.owner(int(p)) != shard))
+                if self.kv.owner_of(p) != shard))
             if remote:
                 new_local = self.kv.alloc_on(shard, len(remote))
                 # Hop spans of this pull-in carry the originating request.
@@ -1150,6 +1313,13 @@ class ShardedServeEngine:
             "requests_per_shard": list(self.requests_per_shard),
             "remote_page_reads": self.remote_page_reads,
             "migration": dataclasses.asdict(self.migration),
+            # Virtual paging (DESIGN.md §11): lazy pulls landed after
+            # ownership flips, plus the page table's mutation clock (any
+            # remap/flip/pull bumps it — forensics for stale handles).
+            "first_touch_pulls": self.kv.first_touch_pulls,
+            "page_table_generation": self.kv.table.generation,
+            "page_table_remaps": self.kv.table.remaps,
+            "pending_pages": len(self.kv.table.pending_pages()),
             "steps": max(p["serve.steps"] for p in per),
             "completed": sum(p["serve.completed"] for p in per),
             "admission_stalls": sum(p["serve.admission_stalls"]

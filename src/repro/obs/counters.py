@@ -10,7 +10,10 @@ share one documented namespace:
   …);
 * ``sharded.*``      — mesh-level counters (``sharded.num_shards``,
   ``sharded.requests_per_shard``, ``sharded.remote_page_reads``,
-  ``sharded.migration``, ``sharded.per_shard``);
+  ``sharded.migration``, ``sharded.per_shard``, plus the DESIGN.md §11
+  virtual-paging block: ``sharded.first_touch_pulls``,
+  ``sharded.page_table_generation``, ``sharded.page_table_remaps``,
+  ``sharded.pending_pages``);
 * ``translation.*``  — chain-lowering cache counters
   (``translation.hits``, ``translation.lookups``,
   ``translation.transform_fusion_hit_rate``, …), plus a nested

@@ -30,6 +30,7 @@ import os
 import sys
 from typing import Dict, List, Optional, Sequence
 
+from .mmu_cell import MMU_GATED_METRICS
 from .serve_cell import SERVE_GATED_METRICS
 from .sharded_cell import SHARDED_GATED_METRICS
 from .transform_cell import TRANSFORM_GATED_METRICS
@@ -100,6 +101,18 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
     "effective_bandwidth_gain": 0.03,
     "fidelity_max_rel_err": 0.10,
     "transform_fusion_hit_rate": 0.03,
+    # MMU/IOTLB cells (schema v8, DESIGN.md §11). Every number comes from
+    # the deterministic cycle model or the page-table cost model (exact
+    # on an unchanged tree); the bands only absorb intentional re-tuning
+    # of the walk/prefetch parameters.
+    "tlb_hit_rate": 0.03,
+    "walk_stall_cycles": 0.05,
+    "defrag_remap_cycles": 0.05,
+    "defrag_copy_cycles": 0.05,
+    # Ownership-first migration (sharded cells, schema v8): first-touch
+    # rounds ride the deterministic fabric clock; small integers, so the
+    # band only absorbs intentional pull-path re-scoping.
+    "first_touch_latency_rounds": 0.10,
 }
 
 #: Histogram-valued gated metrics (schema v5): the cell stores the full
@@ -137,16 +150,23 @@ METRIC_POLARITY: Dict[str, int] = {
     "effective_bandwidth_gain": +1,
     "fidelity_max_rel_err": -1,
     "transform_fusion_hit_rate": +1,
+    "tlb_hit_rate": +1,
+    "walk_stall_cycles": -1,
+    "defrag_remap_cycles": -1,
+    "defrag_copy_cycles": -1,
+    "first_touch_latency_rounds": -1,
 }
 
 ALL_GATED_METRICS = (tuple(GATED_METRICS) + tuple(SERVE_GATED_METRICS)
                      + tuple(SHARDED_GATED_METRICS)
-                     + tuple(TRANSFORM_GATED_METRICS))
+                     + tuple(TRANSFORM_GATED_METRICS)
+                     + tuple(MMU_GATED_METRICS))
 
 _KIND_METRICS = {
     "serve": SERVE_GATED_METRICS,
     "sharded": SHARDED_GATED_METRICS,
     "transform": TRANSFORM_GATED_METRICS,
+    "mmu": MMU_GATED_METRICS,
 }
 
 
@@ -321,6 +341,7 @@ def quick_subset(doc: Dict[str, object]):
                  and c.get("transfer_bytes") in DEFAULT_TRANSFORM_SPEC
                  .transfer_bytes)
              or c.get("kind") in ("serve", "sharded")
+             or (c.get("kind") == "mmu" and c.get("mem_latency") in lat)
              or (c.get("kind") == "dma" and c.get("channels") in ch
                  and c.get("mem_latency") in lat)}
     if not cells:
@@ -378,7 +399,7 @@ def sharded_summary(doc: Dict[str, object]) -> str:
              f"  {'mesh':>4}  {'migration_cycles':>16}  "
              f"{'per_shard_util':>14}  {'merge_ratio':>11}  "
              f"{'overlap':>7}  {'stall_p99':>9}  {'rebal':>5}  "
-             f"{'retained':>8}"]
+             f"{'retained':>8}  {'1st_touch':>9}"]
     for mesh, m in rows:
         lines.append(
             f"  {mesh:>4}  "
@@ -388,7 +409,38 @@ def sharded_summary(doc: Dict[str, object]) -> str:
             f"{m.get('migration_overlap_ratio', float('nan')):>7.2f}  "
             f"{m.get('p99_migration_stall_cycles', float('nan')):>9.1f}  "
             f"{m.get('rebalance_convergence_steps', float('nan')):>5.0f}  "
-            f"{m.get('throughput_retained_during_resize', float('nan')):>8.2f}")
+            f"{m.get('throughput_retained_during_resize', float('nan')):>8.2f}  "
+            f"{m.get('first_touch_latency_rounds', float('nan')):>9.0f}")
+    return "\n".join(lines)
+
+
+def mmu_summary(doc: Dict[str, object]) -> str:
+    """IOTLB + remap-vs-copy defrag table (schema v8, DESIGN.md §11).
+
+    The live evidence for the MMU-aware paging claims: chain-lookahead
+    translation prefetch keeps the sequential paged-KV stream >= 0.9
+    IOTLB hit rate, and remap-defrag undercuts copy-defrag at every
+    memory latency."""
+    if not doc.get("iotlb_enabled", True):
+        return "mmu: IOTLB cells disabled in this document (--no-iotlb)"
+    rows = sorted(
+        ((int(c.get("mem_latency", 0)), c.get("metrics", {}),
+          c.get("counters", {}))
+         for c in doc["cells"].values() if c.get("kind") == "mmu"))
+    if not rows:
+        return "mmu: no MMU cells in this document"
+    lines = ["mmu: IOTLB hit rate and remap-vs-copy defrag by latency",
+             f"  {'L':>3}  {'tlb_hit':>7}  {'walk_stall':>10}  "
+             f"{'remap_cyc':>9}  {'copy_cyc':>8}  {'speedup':>7}"]
+    for lat, m, c in rows:
+        remap = m.get("defrag_remap_cycles", float("nan"))
+        copy = m.get("defrag_copy_cycles", float("nan"))
+        lines.append(
+            f"  {lat:>3}  "
+            f"{m.get('tlb_hit_rate', float('nan')):>7.3f}  "
+            f"{m.get('walk_stall_cycles', float('nan')):>10.0f}  "
+            f"{remap:>9.0f}  {copy:>8.0f}  "
+            f"{copy / max(remap, 1.0):>6.1f}x")
     return "\n".join(lines)
 
 
@@ -492,11 +544,13 @@ def _emit_summary(doc: Dict[str, object]) -> None:
     translation_text = translation_summary(doc)
     transform_text = transform_summary(doc)
     serve_text = serve_latency_summary(doc)
+    mmu_text = mmu_summary(doc)
     print(spec_text)
     print(sharded_text)
     print(translation_text)
     print(transform_text)
     print(serve_text)
+    print(mmu_text)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if step_summary:
         with open(step_summary, "a") as f:
@@ -510,6 +564,8 @@ def _emit_summary(doc: Dict[str, object]) -> None:
                     "```\n" + transform_text + "\n```\n")
             f.write("### Perf gate — serve request latency (p50/p99)\n\n"
                     "```\n" + serve_text + "\n```\n")
+            f.write("### Perf gate — MMU/IOTLB cells\n\n"
+                    "```\n" + mmu_text + "\n```\n")
 
 
 def _parse_tolerances(pairs: Sequence[str]) -> Dict[str, float]:

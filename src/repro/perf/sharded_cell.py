@@ -34,6 +34,11 @@ Gated metrics (schema v7):
   foreground migration workload alone / with a concurrent
   background-priority resize handoff off the last shard; 1.0 at mesh 1.
   Hard floor: **>= 0.8 at mesh >= 4** (the mesh-4 cell measures 4 -> 3).
+* ``first_touch_latency_rounds`` (schema v8, DESIGN.md §11) — fabric
+  rounds from the first touch of an ownership-flipped page to residency
+  (the lazy pull through ``ensure_resident``); 0.0 at mesh 1.  Hard
+  invariant at mesh >= 4: **strictly below** the rounds of a full
+  synchronous migration of the same batch.
 
 Determinism contract: identical to the DMA cells — every number is a
 pure function of ``(seed, cell_key)``: the fabric runs on a logical
@@ -64,6 +69,7 @@ SHARDED_GATED_METRICS = (
     "p99_migration_stall_cycles",
     "rebalance_convergence_steps",
     "throughput_retained_during_resize",
+    "first_touch_latency_rounds",
 )
 
 #: The mesh axis of the sweep — matches the CI lane's 8 emulated devices.
@@ -170,7 +176,8 @@ def _submit_waves(kv, src: List[int], dst: List[int], wave: int,
     overlap the async fabric exists to expose."""
     out = []
     for i in range(0, len(src), wave):
-        out.append(kv.move_pages(src[i:i + wave], dst[i:i + wave],
+        out.append(kv.move_pages(kv.refs(src[i:i + wave]),
+                                 kv.refs(dst[i:i + wave]),
                                  priority=priority, drain=False))
     return out
 
@@ -250,7 +257,7 @@ def _rebalance_convergence(seed: int, mesh: int,
         plan = planner.plan(kv)
         if plan is not None:
             src, dst = plan
-            kv.move_pages(src, dst, priority=0)
+            kv.move_pages(kv.refs(src), kv.refs(dst), priority=0)
             remap = dict(zip(src, dst))
             loc = np.asarray([remap.get(int(p), int(p)) for p in loc],
                              np.int64)
@@ -335,13 +342,15 @@ def _resize_retention(seed: int, mesh: int,
     while any(rt_b.plan_outstanding(s) for s in fg_b):
         if chunks and rounds_during % spec.handoff_period == 0:
             s, d = chunks.pop(0)
-            handoff.append(kv_b.move_pages(s, d, priority=0, drain=False))
+            handoff.append(kv_b.move_pages(kv_b.refs(s), kv_b.refs(d),
+                                           priority=0, drain=False))
         rt_b.pump()
         rounds_during += 1
         if rounds_during > 65536:
             raise RuntimeError("resize foreground did not quiesce")
     for s, d in chunks:   # tail of the handoff after the foreground
-        handoff.append(kv_b.move_pages(s, d, priority=0, drain=False))
+        handoff.append(kv_b.move_pages(kv_b.refs(s), kv_b.refs(d),
+                                       priority=0, drain=False))
     rt_b.pump_until_idle()
     rt_b.drain_until_idle()
     lost = [(s.hop_completions, s.hops) for s in handoff
@@ -353,6 +362,62 @@ def _resize_retention(seed: int, mesh: int,
                 if rounds_during else 1.0)
     return {"retained": retained, "rounds_alone": rounds_alone,
             "rounds_during": rounds_during, "handoff_pages": len(h_src)}
+
+
+def _first_touch_latency(seed: int, mesh: int,
+                         spec: ShardedCellSpec) -> Dict[str, float]:
+    """Ownership-first migration (DESIGN.md §11): fabric rounds from the
+    first touch of a flipped page to residency, vs the rounds a full
+    synchronous migration of the same batch costs.
+
+    Two same-seed pools each hold one written batch on shard 0.  The
+    synchronous leg migrates the whole batch eagerly and counts fabric
+    rounds to quiescence.  The lazy leg flips the batch's *ownership* to
+    shard 1 (a page-table write — zero rounds) and then touches one
+    page: ``ensure_resident`` pulls exactly that page through the
+    normal fabric path.  The gated number is the touch-to-resident
+    rounds — bounded by one page's hop, not the batch.
+    """
+    if mesh == 1 or spec.fabric != "async":
+        return {"first_touch_rounds": 0.0, "sync_rounds": 0.0,
+                "batch_pages": 0, "pulled": 0}
+    rng = _cell_rng(seed, mesh, spec, salt="/firsttouch")
+    batch = min(spec.handoff_pages, spec.pages_per_shard // 2)
+    rows = rng.standard_normal((batch,)).astype(np.float32)
+
+    def _filled():
+        rt, kv, p = _make_runtime(mesh, spec)
+        pages = kv.alloc_on(0, batch)
+        for i, pg in enumerate(pages):
+            row = np.full(kv.row_elems, rows[i], np.float32)
+            kv.write_page(pg, row, -row)
+        return rt, kv, pages
+
+    # Synchronous leg: eager batch migration, rounds to quiescence.
+    rt_s, kv_s, pages_s = _filled()
+    dst = kv_s.alloc_on(1, batch)
+    base = rt_s.fabric.now
+    kv_s.move_pages(pages_s, dst, priority=1)
+    sync_rounds = rt_s.fabric.now - base
+
+    # Lazy leg: flip ownership now, pull one page on first touch.
+    rt_l, kv_l, pages_l = _filled()
+    flipped = kv_l.flip_ownership(pages_l, 1)
+    base = rt_l.fabric.now
+    k_one, _ = kv_l.page_rows([flipped[0]])
+    first_rounds = rt_l.fabric.now - base
+    if not np.allclose(k_one[0], np.full(kv_l.row_elems, rows[0])):
+        raise RuntimeError(
+            "first-touch pull delivered wrong page contents — the lazy "
+            "migration path is corrupting pages")
+    pulled = kv_l.first_touch_pulls
+    if pulled != 1:
+        raise RuntimeError(
+            f"touching one flipped page pulled {pulled} pages — "
+            "first touch is not lazy")
+    return {"first_touch_rounds": float(first_rounds),
+            "sync_rounds": float(sync_rounds),
+            "batch_pages": batch, "pulled": pulled}
 
 
 def run_sharded_cell(
@@ -387,8 +452,17 @@ def run_sharded_cell(
 
     rebalance = _rebalance_convergence(seed, mesh, spec)
     resize = _resize_retention(seed, mesh, spec)
+    first_touch = _first_touch_latency(seed, mesh, spec)
 
     if mesh >= 4 and spec.fabric == "async":
+        if not (first_touch["first_touch_rounds"]
+                < first_touch["sync_rounds"]):
+            ft, sr = (first_touch["first_touch_rounds"],
+                      first_touch["sync_rounds"])
+            raise RuntimeError(
+                f"first-touch latency ({ft:.0f} rounds) is not below a "
+                f"full synchronous migration ({sr:.0f} rounds) at mesh "
+                f"{mesh} — ownership-first migration lost its point")
         if overlap < MIN_OVERLAP_RATIO:
             raise RuntimeError(
                 f"async fabric hid only {overlap:.3f} of its in-flight "
@@ -418,6 +492,8 @@ def run_sharded_cell(
             float(contended.migration_cycles_p99),
         "rebalance_convergence_steps": float(rebalance["steps"]),
         "throughput_retained_during_resize": float(resize["retained"]),
+        "first_touch_latency_rounds":
+            float(first_touch["first_touch_rounds"]),
     }
     counters = {
         "mesh": mesh,
@@ -435,6 +511,7 @@ def run_sharded_cell(
                        "chain_in", "chain_out")},
         "rebalance": {k: float(v) for k, v in rebalance.items()},
         "resize": {k: float(v) for k, v in resize.items()},
+        "first_touch": {k: float(v) for k, v in first_touch.items()},
         "sync_baseline": {
             "migration_cycles_mean": float(shared.migration_cycles_mean),
             "migration_cycles_p99": float(shared.migration_cycles_p99),

@@ -69,6 +69,11 @@ from .sharded_cell import (
     SHARDED_GATED_METRICS,
     cell_entry as sharded_cell_entry,
 )
+from .mmu_cell import (
+    DEFAULT_MMU_SPEC,
+    MMU_GATED_METRICS,
+    mmu_cell_entries,
+)
 from .transform_cell import (
     DEFAULT_TRANSFORM_SPEC,
     TRANSFORM_GATED_METRICS,
@@ -76,6 +81,14 @@ from .transform_cell import (
 )
 from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 
+#: v8: MMU-aware virtual paging (DESIGN.md §11) — new "mmu" cells gate
+#: the engine-side IOTLB (``tlb_hit_rate`` >= 0.9 on the sequential
+#: paged-KV stream with chain-lookahead prefetch, ``walk_stall_cycles``)
+#: and remap-vs-copy defragmentation (``defrag_remap_cycles`` strictly
+#: below ``defrag_copy_cycles``); the sharded cells gain
+#: ``first_touch_latency_rounds`` (ownership-first migration: pull-one-
+#: page-on-touch rounds, strictly below the full synchronous batch
+#: migration at mesh >= 4); the document records ``iotlb_enabled``.
 #: v7: async-fabric sharded cells (DESIGN.md §10) — the sharded cells
 #: regenerate on Zipf-skewed page traffic through the async fabric and
 #: gain four gated metrics: ``migration_overlap_ratio`` (in-flight
@@ -103,7 +116,7 @@ from .workloads import SCALES, WORKLOAD_NAMES, Scale, generate
 #: surface (DESIGN.md §6). v2 added the speculation-policy metrics
 #: (spec_bus_utilization_*) on every DMA cell plus the end-to-end serve
 #: cell. Older baselines must be regenerated.
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 #: The gated perf surface of DMA cells. gate.py refuses documents missing
 #: any of these (serve cells gate SERVE_GATED_METRICS instead).
@@ -158,6 +171,11 @@ class SweepSpec:
     #: so a disabled baseline is self-describing rather than vacuously
     #: green.
     translation: bool = True
+    #: MMU/IOTLB cells (schema v8, DESIGN.md §11). False (--no-iotlb) is
+    #: the escape hatch: the mmu cells are skipped entirely and the
+    #: document records ``iotlb_enabled: false``, so a disabled baseline
+    #: is self-describing.
+    iotlb: bool = True
 
     @property
     def scale(self) -> Scale:
@@ -178,6 +196,7 @@ def default_spec(
     include_sharded: bool = True,
     include_transforms: bool = True,
     translation: bool = True,
+    iotlb: bool = True,
 ) -> SweepSpec:
     if mode not in SCALES:
         raise ValueError(f"unknown mode {mode!r}; have {sorted(SCALES)}")
@@ -198,6 +217,7 @@ def default_spec(
         include_sharded=include_sharded,
         include_transforms=include_transforms,
         translation=translation,
+        iotlb=iotlb,
     )
 
 
@@ -443,6 +463,17 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
                     f"{k}={v:.3f}" for k, v in cell["metrics"].items()),
                     file=sys.stderr)
 
+    mmu_cells = []
+    if spec.iotlb:
+        for key, cell in mmu_cell_entries(spec.seed, spec.mem_latencies,
+                                          DEFAULT_MMU_SPEC):
+            cells[key] = cell
+            mmu_cells.append(key)
+            if progress:
+                print(f"  {key}: " + " ".join(
+                    f"{k}={v:.3f}" for k, v in cell["metrics"].items()),
+                    file=sys.stderr)
+
     transform_cells = []
     if spec.include_transforms:
         for key, cell in transform_cell_entries(
@@ -461,6 +492,7 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
         "seed": spec.seed,
         "repeats": spec.repeats,
         "translation_cache_enabled": spec.translation,
+        "iotlb_enabled": spec.iotlb,
         "dimensions": {
             "archs": list(spec.archs),
             "workloads": list(spec.workloads),
@@ -470,11 +502,13 @@ def run_sweep(spec: Optional[SweepSpec] = None, *,
             "mesh_sizes": list(spec.mesh_sizes),
             "sharded_cells": sharded_cells,
             "transform_cells": transform_cells,
+            "mmu_cells": mmu_cells,
         },
         "gated_metrics": list(GATED_METRICS),
         "serve_gated_metrics": list(SERVE_GATED_METRICS),
         "sharded_gated_metrics": list(SHARDED_GATED_METRICS),
         "transform_gated_metrics": list(TRANSFORM_GATED_METRICS),
+        "mmu_gated_metrics": list(MMU_GATED_METRICS),
         "cells": cells,
     }
 
@@ -493,6 +527,7 @@ def spec_from_doc(doc: Dict[str, object]) -> SweepSpec:
         include_sharded=bool(dims.get("sharded_cells")),
         include_transforms=bool(dims.get("transform_cells")),
         translation=bool(doc.get("translation_cache_enabled", True)),
+        iotlb=bool(doc.get("iotlb_enabled", True)),
     )
 
 
@@ -517,11 +552,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--no-translation-cache", action="store_true",
                     help="run the legacy uncached dispatch path (hit rate "
                          "0.0, speedup 1.0; recorded in the document)")
+    ap.add_argument("--no-iotlb", action="store_true",
+                    help="skip the MMU/IOTLB cells (schema v8); recorded "
+                         "as iotlb_enabled=false in the document")
     ap.add_argument("--progress", action="store_true")
     args = ap.parse_args(argv)
 
     doc = run_sweep(default_spec(args.mode, args.seed,
-                                 translation=not args.no_translation_cache),
+                                 translation=not args.no_translation_cache,
+                                 iotlb=not args.no_iotlb),
                     progress=args.progress)
     write_doc(doc, args.out)
     print(f"wrote {args.out}: {len(doc['cells'])} cells "

@@ -4,7 +4,15 @@ block table). One page = one descriptor: `src` = page id in the pool,
 placement, so chains are laid out sequentially when possible — making the
 hardware's sequential speculation hit by construction (DESIGN.md §2).
 
-Page *moves* (defragmentation, migration) are descriptor work and go
+Virtual addressing (DESIGN.md §11): sequence block tables hold *virtual*
+page ids; a :class:`repro.mmu.PageTable` maps them to physical pool
+slots. ``defragment`` is therefore a *remap* — live pages get fresh
+dense virtual ids pointing at their existing slots, so the §II-C
+speculator sees a sequential chain without a single payload byte
+crossing the bus. The legacy copy-defrag survives as ``mode="copy"``
+(the A/B leg the remap-vs-copy perf cell measures against).
+
+Page *moves* (migration, copy-defrag) are descriptor work and go
 through the multi-channel DMA runtime (DESIGN.md §3): the pool registers
 its page arrays as runtime pools and submits row-move chains instead of
 calling execution engines directly.
@@ -20,7 +28,9 @@ import numpy as np
 
 from repro.core.chain import from_pages
 from repro.core.descriptor import DescriptorArray
+from repro.core.pageref import PageRef, as_pagerefs
 from repro.core.prefetch import estimate_hit_rate
+from repro.mmu import PageTable
 from repro.runtime import DMARuntime, SubmitRequest
 
 
@@ -30,7 +40,11 @@ class OutOfPages(RuntimeError):
 
 @dataclasses.dataclass
 class PageAllocator:
-    """Free-list page allocator with sequential-preference placement."""
+    """Free-list page allocator with sequential-preference placement.
+
+    Allocates *virtual* page ids: the ids sequences hold in their block
+    tables and the ids whose contiguity the §II-C speculator exploits.
+    """
 
     num_pages: int
 
@@ -57,7 +71,7 @@ class PageAllocator:
         self._free.extend(self._owned.pop(seq_id, []))
 
     def chain(self, seq_id: int, page_elems: int) -> DescriptorArray:
-        """The sequence's block table as a descriptor chain."""
+        """The sequence's block table as a descriptor chain (virtual)."""
         return from_pages(self._owned.get(seq_id, []), page_elems)
 
     def speculation_hit_rate(self, seq_id: int, page_bytes: int = 32) -> float:
@@ -70,9 +84,11 @@ class PageAllocator:
 class PagedKVCache:
     """Single-layer paged pool, shared across sequences.
 
-    k_pages/v_pages: (num_pages, page, KV, D). Block tables are dense
-    (max_seqs, max_pages) int32 snapshots of the descriptor chains, i.e. the
-    flattened form the Pallas kernel consumes.
+    k_pages/v_pages: (num_pages, page, KV, D), indexed by *physical*
+    slot. Block tables are dense (max_seqs, max_pages) int32 snapshots of
+    the descriptor chains in *virtual* ids; :meth:`kernel_args`
+    translates them through the page table into the flattened physical
+    form the Pallas kernel consumes.
     """
 
     page: int
@@ -91,6 +107,15 @@ class PagedKVCache:
                               np.int32)
         self.lengths = np.zeros((self.max_seqs,), np.int32)
         self.alloc = PageAllocator(self.num_pages)
+        self.page_table = PageTable(self.num_pages)
+        self._phys_free = list(range(self.num_pages))
+
+    # -- translation ----------------------------------------------------------
+    def _slot(self, vid: int) -> int:
+        return self.page_table.slot_of(int(vid))
+
+    def pageref(self, vid: int) -> PageRef:
+        return PageRef(int(vid), self.page_table.page_generation(int(vid)))
 
     # -- sequence lifecycle ---------------------------------------------------
     def admit(self, slot: int) -> None:
@@ -99,6 +124,11 @@ class PagedKVCache:
         self.lengths[slot] = 0
 
     def evict(self, slot: int) -> None:
+        # Physical slots go back with their virtual ids: look them up
+        # before the allocator forgets the ownership list.
+        for v in self.alloc._owned.get(slot, []):
+            self._phys_free.append(self._slot(v))
+        self._phys_free.sort()
         self.alloc.free(slot)
         self.tables[slot] = -1
         self.lengths[slot] = 0
@@ -111,18 +141,26 @@ class PagedKVCache:
             raise OutOfPages(f"sequence exceeds {self.max_pages_per_seq} pages")
         if self.tables[slot, page_idx] < 0:
             (page_id,) = self.alloc.alloc(slot, 1)
+            phys = self._phys_free.pop(0)
+            if self._slot(page_id) != phys:
+                self.page_table.remap(page_id, 0, phys)
             self.tables[slot, page_idx] = page_id
-        pid = int(self.tables[slot, page_idx])
+        pid = self._slot(int(self.tables[slot, page_idx]))
         self.k_pages = self.k_pages.at[pid, offset].set(k)
         self.v_pages = self.v_pages.at[pid, offset].set(v)
         self.lengths[slot] = pos + 1
 
     # -- kernel-facing views ---------------------------------------------------
     def kernel_args(self) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        phys = self.page_table.slots_of(
+            self.tables.reshape(-1)).reshape(self.tables.shape)
         return (self.k_pages, self.v_pages,
-                jnp.asarray(self.tables), jnp.asarray(self.lengths))
+                jnp.asarray(phys, jnp.int32), jnp.asarray(self.lengths))
 
     def chain(self, slot: int) -> DescriptorArray:
+        """`slot`'s block table as a *virtual* descriptor chain — the
+        layout the speculator sees; lower through
+        :func:`repro.runtime.lowering.translate_chain` to execute."""
         pages = [int(p) for p in self.tables[slot] if p >= 0]
         return from_pages(pages, self.page * self.kv_heads * self.head_dim)
 
@@ -135,24 +173,31 @@ class PagedKVCache:
         rt.register_pool(self._POOL_K, self.k_pages)
         rt.register_pool(self._POOL_V, self.v_pages)
 
-    def move_pages(self, rt: DMARuntime, src_pages: List[int],
-                   dst_pages: List[int], *,
+    def move_pages(self, rt: DMARuntime, src_pages: List[PageRef],
+                   dst_pages: List[PageRef], *,
                    channel: Optional[str] = None) -> None:
-        """Relocate whole pages through the runtime (no direct engine call).
+        """Copy page *contents* between virtual pages through the runtime.
 
         Submits one row-move chain per pool (K and V) on a ``blocked_2d``
-        channel, drains the runtime, and refreshes the local arrays from
-        the runtime pools.
+        channel — addressed physically via the page table — drains the
+        runtime, and refreshes the local arrays from the runtime pools.
         """
         if len(src_pages) != len(dst_pages):
             raise ValueError("src/dst page lists must pair up")
         if not src_pages:
             return
+        src_pages = as_pagerefs(src_pages, api="PagedKVCache.move_pages")
+        dst_pages = as_pagerefs(dst_pages, api="PagedKVCache.move_pages")
+        self._move_phys(rt, [self._slot(p) for p in src_pages],
+                        [self._slot(p) for p in dst_pages], channel=channel)
+
+    def _move_phys(self, rt: DMARuntime, src: List[int], dst: List[int],
+                   *, channel: Optional[str] = None) -> None:
         self.register_with_runtime(rt)
         moves = DescriptorArray.create(
-            np.asarray(src_pages, np.int64),
-            np.asarray(dst_pages, np.int64),
-            np.ones(len(src_pages), np.int64))
+            np.asarray(src, np.int64),
+            np.asarray(dst, np.int64),
+            np.ones(len(src), np.int64))
         tier = None if channel else "blocked_2d"
         rt.submit(SubmitRequest(chain=moves, src_pool=self._POOL_K,
                                 dst_pool=self._POOL_K, channel=channel,
@@ -164,15 +209,22 @@ class PagedKVCache:
         self.k_pages = rt.pool(self._POOL_K)
         self.v_pages = rt.pool(self._POOL_V)
 
-    def defragment(self, slot: int, rt: DMARuntime, *,
-                   channel: Optional[str] = None) -> float:
+    def defragment(self, slot: int, rt: Optional[DMARuntime] = None, *,
+                   channel: Optional[str] = None,
+                   mode: str = "remap") -> float:
         """Compact `slot`'s pages onto the lowest-id free run and return the
         §II-C speculation hit rate of the new layout.
 
-        The physical copy is descriptor work submitted through the runtime;
-        the block table and allocator state are rewired afterwards. A slot
-        already on its best layout is left untouched.
+        ``mode="remap"`` (default): the live pages keep their physical
+        slots; they are *renumbered* onto fresh dense virtual ids — a
+        page-table update, no descriptor chain, no payload traffic.
+        ``mode="copy"`` is the legacy physical compaction (descriptor
+        work through the runtime, which it then requires). Both modes
+        leave identical logical pool contents (the ``tests/test_mmu.py``
+        oracle); a slot already on its best layout is left untouched.
         """
+        if mode not in ("remap", "copy"):
+            raise ValueError(f"mode must be 'remap' or 'copy', got {mode!r}")
         old = [int(p) for p in self.tables[slot] if p >= 0]
         n = len(old)
         if n == 0:
@@ -185,7 +237,26 @@ class PagedKVCache:
         cur_rate = self.alloc.speculation_hit_rate(slot)
         if new_rate <= cur_rate:
             return cur_rate
-        self.move_pages(rt, old, new, channel=channel)
+        if mode == "remap":
+            # Renumber: new vid i -> old vid i's physical slot. Contents
+            # never move; the old vids return to the virtual free pool.
+            for nv, ov in zip(new, old):
+                self.page_table.remap(nv, 0, self._slot(ov))
+        else:
+            if rt is None:
+                raise ValueError("mode='copy' needs a runtime")
+            # Legacy compaction: contents physically move onto the lowest
+            # free slots, and the new vids map onto those slots.
+            dst_phys = sorted(self._phys_free)[:n]
+            self._move_phys(rt, [self._slot(ov) for ov in old], dst_phys,
+                            channel=channel)
+            for nv, ph in zip(new, dst_phys):
+                if self._slot(nv) != ph:
+                    self.page_table.remap(nv, 0, ph)
+                self._phys_free.remove(ph)
+            # The vacated source slots are free again.
+            self._phys_free.extend(self._slot(ov) for ov in old)
+            self._phys_free.sort()
         # Rewire bookkeeping: slot now owns `new`; `old` returns to the pool.
         self.alloc._free = [p for p in free if p not in set(new)] + old
         self.alloc._owned[slot] = list(new)
@@ -197,7 +268,7 @@ class PagedKVCache:
         ln = int(self.lengths[slot])
         ks, vs = [], []
         for i in range((ln + self.page - 1) // self.page):
-            pid = int(self.tables[slot, i])
+            pid = self._slot(int(self.tables[slot, i]))
             ks.append(np.asarray(self.k_pages[pid]))
             vs.append(np.asarray(self.v_pages[pid]))
         if not ks:

@@ -1,0 +1,388 @@
+"""Virtual paging tests (DESIGN.md §11): PageTable vs a numpy oracle,
+remap-defrag ≡ copy-defrag across every registry config, no lost pages
+under ownership flips racing in-flight fabric tickets, base-invariant
+cached-translation drains, the PageRef deprecation shim, and the IOTLB
+cycle model.
+
+The hypothesis suite at the bottom (PageTable generation/remap
+invariants) is slow-marked and skips on minimal installs; everything
+else must collect without hypothesis.
+"""
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core.chain import from_pages
+from repro.core.pageref import PageRef, as_pageref, as_pagerefs
+from repro.core.signature import canonicalize
+from repro.core.simulator import SimConfig, simulate
+from repro.core.speculation import FixedDepth
+from repro.distributed.sharded_runtime import (
+    ShardedDMARuntime,
+    ShardedKVPool,
+)
+from repro.mmu import IOTLBParams, PageTable, remap_cycles
+from repro.runtime import SubmitRequest, default_runtime
+from repro.runtime.lowering import translate_chain
+from repro.serve import PagedKVCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # minimal installs
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# PageTable vs an independent numpy oracle
+# ---------------------------------------------------------------------------
+
+class _OracleTable:
+    """Independent re-implementation of the PageTable contract."""
+
+    def __init__(self, num_pages, num_shards):
+        per = num_pages // num_shards
+        self.slot = np.arange(num_pages, dtype=np.int64)
+        self.shard = self.slot // per
+        self.gen = np.zeros(num_pages, np.int64)
+        self.home = {}
+        self.global_gen = 0
+
+    def _bump(self, v):
+        self.gen[v] += 1
+        self.global_gen += 1
+
+    def remap(self, v, s, slot):
+        self.shard[v], self.slot[v] = s, slot
+        self.home.pop(v, None)
+        self._bump(v)
+
+    def flip(self, v, s):
+        if self.slot[v] >= 0:
+            self.home[v] = (int(self.shard[v]), int(self.slot[v]))
+        self.shard[v], self.slot[v] = s, -1
+        self._bump(v)
+
+    def pull(self, v, slot):
+        self.home.pop(v)
+        self.slot[v] = slot
+        self._bump(v)
+
+
+def test_page_table_matches_numpy_oracle_under_random_ops():
+    rng = np.random.default_rng(0)
+    t = PageTable(32, 4)
+    o = _OracleTable(32, 4)
+    for _ in range(400):
+        v = int(rng.integers(32))
+        op = int(rng.integers(3))
+        if op == 0:
+            s, slot = int(rng.integers(4)), int(rng.integers(32))
+            t.remap(v, s, slot)
+            o.remap(v, s, slot)
+        elif op == 1 and not t.is_pending(v):
+            s = int(rng.integers(4))
+            t.flip_owner(v, s)
+            o.flip(v, s)
+        elif op == 2 and t.is_pending(v):
+            slot = int(rng.integers(32))
+            home = t.complete_pull(v, slot)
+            assert home == o.home[v]
+            o.pull(v, slot)
+    snap = t.snapshot()
+    np.testing.assert_array_equal(snap["slot"], o.slot)
+    np.testing.assert_array_equal(snap["shard"], o.shard)
+    np.testing.assert_array_equal(snap["gen"], o.gen)
+    assert t.generation == o.global_gen
+    assert t.pending_pages() == sorted(o.home)
+    # Vectorized translation agrees with the scalar path (and passes the
+    # block tables' -1 sentinel through untouched).
+    probe = np.array([-1, 0, 5, 31, -1], np.int64)
+    want = [p if p < 0 else t.slot_of(p) for p in probe]
+    np.testing.assert_array_equal(t.slots_of(probe), want)
+
+
+def test_rehome_slots_follows_physical_relocation_and_pending_homes():
+    t = PageTable(16, 2)
+    t.flip_owner(3, 1)                   # pending, home = (0, 3)
+    t.remap(5, 0, 7)                     # 5 aliases slot 7
+    # Slots 3 and 7 physically move (an evacuation would do this).
+    t.rehome_slots({3: (1, 12), 7: (1, 13)})
+    assert t.map(5) == (1, 13)
+    assert t.map(7) == (1, 13)           # identity mapping of slot 7 follows
+    assert t.is_pending(3) and t.home_of(3) == (1, 12)
+    assert t.rehome_slots({}) is None    # empty map: no-op
+
+
+def test_remap_cycles_cost_model():
+    assert remap_cycles(0, 10) == 0
+    assert remap_cycles(1, 10) == 1 * 3 + 10
+    assert remap_cycles(24, 4) == 24 * 3 + 4
+
+
+# ---------------------------------------------------------------------------
+# Remap-defrag ≡ copy-defrag, all registry configs
+# ---------------------------------------------------------------------------
+
+def _fragmented_pool(arch: str, seed: int = 0) -> PagedKVCache:
+    """Two interleaved sequences: seq 0's pages land on stride-2 ids."""
+    cfg = get_config(arch, reduced=True)
+    pool = PagedKVCache(page=4, num_pages=32, max_seqs=2,
+                        max_pages_per_seq=8,
+                        kv_heads=cfg.num_kv_heads or 1,
+                        head_dim=cfg.head_dim_ or 8)
+    rng = np.random.default_rng(seed)
+    pool.admit(0)
+    pool.admit(1)
+    for _ in range(10):                  # 10 tokens -> 3 pages per seq
+        for s in (0, 1):
+            pool.append(s,
+                        rng.standard_normal((pool.kv_heads, pool.head_dim)),
+                        rng.standard_normal((pool.kv_heads, pool.head_dim)))
+    return pool
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_defrag_remap_bit_identical_to_copy_every_config(arch):
+    before = _fragmented_pool(arch)
+    remapped = _fragmented_pool(arch)
+    copied = _fragmented_pool(arch)
+    rate_r = remapped.defragment(0)                       # table writes only
+    rate_c = copied.defragment(0, default_runtime(2), mode="copy")
+    assert rate_r == rate_c == 1.0                        # dense run
+    assert np.array_equal(remapped.tables[0], copied.tables[0])
+    for s in (0, 1):
+        k0, v0 = before.dense_view(s)
+        kr, vr = remapped.dense_view(s)
+        kc, vc = copied.dense_view(s)
+        np.testing.assert_array_equal(kr, kc)             # bit-identical
+        np.testing.assert_array_equal(vr, vc)
+        np.testing.assert_array_equal(kr, k0)             # and lossless
+        np.testing.assert_array_equal(vr, v0)
+    # The remap leg never built a descriptor chain: contents stayed in
+    # their physical slots, only the virtual numbering changed.
+    live = [int(p) for p in remapped.tables[0] if p >= 0]
+    assert live == sorted(live) and len(live) == 3
+
+
+# ---------------------------------------------------------------------------
+# No lost pages: ownership flips racing in-flight fabric tickets
+# ---------------------------------------------------------------------------
+
+def _assert_no_lost_pages(kv):
+    """Accounting oracle: every physical slot is either on exactly one
+    free list or named by exactly one claimed, resident virtual page."""
+    claimed = [int(v) for v in np.flatnonzero(kv._vused)]
+    seen = {}
+    for v in claimed:
+        s, slot = kv.table.map(v)
+        assert slot >= 0, f"claimed vpage {v} still pending"
+        assert (s, slot) not in seen, \
+            f"vpages {seen[(s, slot)]} and {v} alias slot {(s, slot)}"
+        seen[(s, slot)] = v
+    free = [slot for lst in kv._free for slot in lst]
+    assert len(free) == len(set(free))
+    assert len(free) + len(claimed) == kv.owner.num_pages
+    for s, slot in seen:
+        assert kv.owner.owner(slot) == s          # slot lives on its owner
+        assert slot not in free
+
+
+def test_no_lost_pages_when_flips_race_inflight_tickets():
+    srt = ShardedDMARuntime(num_shards=4)
+    kv = ShardedKVPool(srt, num_pages=64, page=4, kv_heads=1, head_dim=1)
+    src = kv.alloc_on(0, 8)
+    for i, p in enumerate(src):
+        row = np.full(kv.row_elems, float(i + 1), np.float32)
+        kv.write_page(p, row, -row)
+    dst = kv.alloc_on(1, 4)
+    # Cross-shard copy left in flight — tickets live on the fabric.
+    kv.move_pages(src[:4], dst, drain=False)
+    assert srt.fabric_outstanding() == 1
+    # Race: flip ownership while those tickets are still in flight —
+    # including a page that is a *source* of the in-flight copy.
+    tail = kv.flip_ownership(src[4:], 2)
+    head = kv.flip_ownership([src[0]], 3)
+    assert kv.owner_of(tail[0]) == 2 and kv.owner_of(head[0]) == 3
+    srt.pump_until_idle()
+    srt.drain_until_idle()
+    # First touch pulls the flipped pages; contents must be intact.
+    k_tail, _ = kv.page_rows(tail)
+    k_head, _ = kv.page_rows(head)
+    for j, krow in enumerate(k_tail):
+        np.testing.assert_array_equal(
+            krow, np.full(kv.row_elems, float(4 + j + 1), np.float32))
+    np.testing.assert_array_equal(
+        k_head[0], np.full(kv.row_elems, 1.0, np.float32))
+    assert kv.first_touch_pulls == len(tail) + 1
+    # The in-flight copy still landed the right bytes.
+    k_dst, _ = kv.page_rows(dst)
+    for j, krow in enumerate(k_dst):
+        np.testing.assert_array_equal(
+            krow, np.full(kv.row_elems, float(j + 1), np.float32))
+    _assert_no_lost_pages(kv)
+    # Releasing an unpulled flip returns the *home* slot, not a phantom.
+    more = kv.flip_ownership(kv.alloc_on(1, 2), 3)
+    kv.release(more)
+    _assert_no_lost_pages(kv)
+
+
+# ---------------------------------------------------------------------------
+# Cached-translation drains: bit-identical pre/post remap
+# ---------------------------------------------------------------------------
+
+def test_translation_digest_base_invariant_and_drain_bit_identical():
+    row = 8
+    table = PageTable(16)
+    rt = default_runtime(2, ring_capacity=64)
+    rng = np.random.default_rng(3)
+    src0 = rng.standard_normal(16 * row).astype(np.float32)
+    rt.register_pool("src", jnp.asarray(src0))
+    rt.register_pool("dst", jnp.zeros(16 * row, jnp.float32))
+    chain = from_pages([3, 4, 5], row)           # virtual block table
+    digest0 = canonicalize(chain).digest
+
+    def _drain():
+        rt.register_pool("dst", jnp.zeros(16 * row, jnp.float32))
+        phys = translate_chain(chain, table, row, translate_dst=False)
+        rt.submit(SubmitRequest(chain=phys, src_pool="src",
+                                dst_pool="dst"))
+        rt.drain_until_idle()
+        return phys, np.asarray(rt.pool("dst"))
+
+    phys1, out1 = _drain()
+    # Physically relocate page 4's contents to slot 9, then remap.
+    moved = src0.copy()
+    moved[9 * row:10 * row] = moved[4 * row:5 * row]
+    rt.register_pool("src", jnp.asarray(moved))
+    table.remap(4, 0, 9)
+    # The *virtual* chain is untouched: same CanonicalChain digest, so
+    # signature-keyed caches keyed on the virtual form stay warm.
+    assert canonicalize(chain).digest == digest0
+    phys2, out2 = _drain()
+    assert not np.array_equal(np.asarray(phys1.src), np.asarray(phys2.src))
+    np.testing.assert_array_equal(out1, out2)    # bit-identical drain
+
+
+def test_translate_chain_refuses_pending_pages():
+    table = PageTable(8, 2)
+    table.flip_owner(2, 1)
+    chain = from_pages([1, 2], 4)
+    with pytest.raises(RuntimeError, match="pending an ownership pull"):
+        translate_chain(chain, table, 4)
+
+
+# ---------------------------------------------------------------------------
+# PageRef deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_pageref_is_opaque_but_int_compatible():
+    r = PageRef(7, generation=3)
+    assert int(r) == 7 and r.vpage == 7 and r.generation == 3
+    assert as_pageref(r) is r                     # refs pass silently
+    with pytest.raises(TypeError, match="expected a PageRef"):
+        as_pageref("7")
+
+
+def test_bare_int_pages_warn_once_per_list_and_refs_do_not():
+    srt = ShardedDMARuntime(num_shards=2)
+    kv = ShardedKVPool(srt, num_pages=32, page=4, kv_heads=1, head_dim=1)
+    pages = kv.alloc_on(0, 3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # refs: no warning at all
+        kv.page_rows(pages)
+        kv.release(pages)
+    pages = kv.alloc_on(0, 3)
+    with pytest.warns(DeprecationWarning,
+                      match="bare int page ids are deprecated") as rec:
+        kv.page_rows([int(p) for p in pages])
+    assert len(rec) == 1                          # one warning per list
+    with pytest.warns(DeprecationWarning):
+        (ref,) = as_pagerefs([np.int64(int(pages[0]))], api="t")
+    assert isinstance(ref, PageRef)               # numpy ints coerce too
+
+
+# ---------------------------------------------------------------------------
+# IOTLB cycle model
+# ---------------------------------------------------------------------------
+
+def test_iotlb_none_is_bit_identical_to_pre_mmu_model():
+    base = SimConfig("ours", in_flight=4, prefetch=FixedDepth(4))
+    r0 = simulate(base, 13, 256, num_transfers=64)
+    r1 = simulate(dataclasses.replace(base, iotlb=None), 13, 256,
+                  num_transfers=64)
+    assert r0.cycles == r1.cycles
+    assert r1.tlb_hits == r1.tlb_misses == 0
+    assert r1.walk_stall_cycles == 0
+
+
+def test_iotlb_chain_lookahead_prefetch_hides_walks():
+    base = SimConfig("ours", in_flight=4, prefetch=FixedDepth(4))
+    pf = simulate(dataclasses.replace(base, iotlb=IOTLBParams()),
+                  13, 256, num_transfers=200, hit_rate=0.95)
+    demand = simulate(
+        dataclasses.replace(base,
+                            iotlb=IOTLBParams(prefetch=FixedDepth(0))),
+        13, 256, num_transfers=200, hit_rate=0.95)
+    assert pf.tlb_hit_rate >= 0.9                 # the gated floor
+    assert demand.tlb_hit_rate < pf.tlb_hit_rate
+    assert pf.walk_stall_cycles < demand.walk_stall_cycles
+    assert pf.cycles < demand.cycles
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis suite: PageTable generation/remap invariants (slow)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.tuples(st.integers(0, 15), st.integers(0, 3), st.integers(0, 15)),
+        max_size=60)
+
+    @pytest.mark.slow
+    @settings(max_examples=50, deadline=None)
+    @given(_ops)
+    def test_generations_monotone_and_global_counts_bumps(ops):
+        t = PageTable(16, 4)
+        per_page = np.zeros(16, np.int64)
+        for v, s, slot in ops:
+            before = t.page_generation(v)
+            t.remap(v, s, slot)
+            assert t.page_generation(v) == before + 1
+            per_page[v] += 1
+        snap = t.snapshot()
+        np.testing.assert_array_equal(snap["gen"], per_page)
+        assert t.generation == int(per_page.sum()) == t.remaps
+
+    @pytest.mark.slow
+    @settings(max_examples=50, deadline=None)
+    @given(_ops)
+    def test_remap_points_exactly_where_told(ops):
+        t = PageTable(16, 4)
+        want = {v: t.map(v) for v in range(16)}
+        for v, s, slot in ops:
+            t.remap(v, s, slot)
+            want[v] = (s, slot)
+        for v in range(16):
+            assert t.map(v) == want[v]
+        assert t.pending_pages() == []
+
+    @pytest.mark.slow
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 15), st.integers(0, 3), st.integers(0, 15))
+    def test_flip_then_pull_roundtrip(v, s, slot):
+        t = PageTable(16, 4)
+        home0 = t.map(v)
+        g0 = t.page_generation(v)
+        t.flip_owner(v, s)
+        assert t.is_pending(v) and t.shard_of(v) == s
+        assert t.home_of(v) == home0
+        assert t.complete_pull(v, slot) == home0
+        assert t.map(v) == (s, slot)
+        assert t.page_generation(v) == g0 + 2      # flip + pull both bump
+        with pytest.raises(RuntimeError, match="not pending"):
+            t.complete_pull(v, slot)

@@ -112,7 +112,7 @@ def _mini_spec(seed=0):
         workloads=["paged_kv", "moe_dispatch"],
         channel_counts=[2], mem_latencies=[13], repeats=2,
         include_serve=False, include_sharded=False,
-        include_transforms=False)
+        include_transforms=False, iotlb=False)
 
 
 def test_sweep_document_is_bit_for_bit_deterministic():
@@ -123,7 +123,7 @@ def test_sweep_document_is_bit_for_bit_deterministic():
 
 def test_sweep_document_schema_and_counters():
     doc = run_sweep(_mini_spec())
-    assert doc["schema_version"] == 7
+    assert doc["schema_version"] == 8
     assert doc["translation_cache_enabled"] is True
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -154,6 +154,33 @@ def test_sweep_document_schema_and_counters():
             assert ch["drained_descriptors"] == ch["submitted_descriptors"]
 
 
+def test_sweep_mmu_cells_present_and_shaped():
+    """With the IOTLB on (the default), the sweep gains one mmu cell per
+    memory latency, carrying the four schema-v8 gated metrics and the
+    demand-walk A/B baseline in its counters (DESIGN.md §11)."""
+    spec = default_spec(
+        "quick", 0, archs=[list_archs()[0]], workloads=["paged_kv"],
+        channel_counts=[2], mem_latencies=[13], repeats=1,
+        include_serve=False, include_sharded=False,
+        include_transforms=False)
+    doc = run_sweep(spec)
+    assert doc["iotlb_enabled"] is True
+    mmu = {k: c for k, c in doc["cells"].items() if c["kind"] == "mmu"}
+    assert set(mmu) == {"mmu/paged_seq/L13"}
+    cell = mmu["mmu/paged_seq/L13"]
+    m = cell["metrics"]
+    assert set(m) == {"tlb_hit_rate", "walk_stall_cycles",
+                      "defrag_remap_cycles", "defrag_copy_cycles"}
+    assert m["tlb_hit_rate"] >= 0.9                 # the in-cell floor
+    assert m["defrag_remap_cycles"] < m["defrag_copy_cycles"]
+    assert cell["counters"]["demand_walk_baseline"]["tlb_hit_rate"] \
+        < m["tlb_hit_rate"]
+    # The --no-iotlb escape hatch drops them and records the flag.
+    off = run_sweep(_mini_spec())
+    assert off["iotlb_enabled"] is False
+    assert all(c["kind"] != "mmu" for c in off["cells"].values())
+
+
 def test_sweep_counters_show_real_channel_activity():
     doc = run_sweep(_mini_spec())
     cell = next(iter(doc["cells"].values()))
@@ -176,7 +203,7 @@ def test_adaptive_matches_fixed_on_sequential_beats_it_on_storms():
         workloads=["paged_kv", "moe_dispatch", "defrag_churn"],
         channel_counts=[4], mem_latencies=[13, 100], repeats=1,
         include_serve=False, include_sharded=False,
-        include_transforms=False)
+        include_transforms=False, iotlb=False)
     doc = run_sweep(spec)
     assert doc["cells"]
     for key, cell in doc["cells"].items():
@@ -197,7 +224,7 @@ def test_committed_baseline_upholds_adaptive_claim():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_perf.json"
     doc = json.loads(path.read_text())
-    assert doc["schema_version"] == 7
+    assert doc["schema_version"] == 8
     checked = 0
     for key, cell in doc["cells"].items():
         if cell.get("kind") != "dma":

@@ -266,7 +266,8 @@ SHARDED_CELL = "sharded/archA/mesh4"
 
 
 def _sharded_cell(cycles=120.0, util=0.88, merge=1.8, mesh=4,
-                  overlap=0.85, p99=140.0, rebal=5.0, retained=0.95):
+                  overlap=0.85, p99=140.0, rebal=5.0, retained=0.95,
+                  first_touch=4.0):
     return {
         "kind": "sharded",
         "arch": "archA", "workload": "kv_migration", "mesh": mesh,
@@ -278,6 +279,7 @@ def _sharded_cell(cycles=120.0, util=0.88, merge=1.8, mesh=4,
             "p99_migration_stall_cycles": p99,
             "rebalance_convergence_steps": rebal,
             "throughput_retained_during_resize": retained,
+            "first_touch_latency_rounds": first_touch,
         },
         "counters": {},
     }

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""PageRef lint: no new internal bare-int page-id call sites (DESIGN.md §11).
+
+The virtual-addressing redesign made every page-holding surface —
+``ShardedKVPool`` alloc/free/move/defragment/flip, ``PagedKVCache``
+moves, ``Request.kv_pages`` — traffic in opaque :class:`PageRef`
+handles. Bare ``int`` page ids still *work* for one release through the
+``as_pageref`` DeprecationWarning shim (mirroring the PR 8
+``SubmitRequest`` bridge), but first-party code must not lean on the
+shim: handles come from the pool (``alloc_on``/``refs``/``defragment``/
+``flip_ownership``), never from integer literals the caller made up.
+
+A call site is flagged when a *pages-position* argument is an integer
+literal the author typed:
+
+* a pure int-literal list/tuple (``[3, 4, 5]``) passed to a page-list
+  API (``move_pages``, ``release``, ``page_rows``, ``flip_ownership``,
+  ``ensure_resident``, ``defragment``) or to ``kv_pages=``;
+* a bare int-literal scalar as ``write_page``'s first argument.
+
+Variables, comprehensions, slices and ``pool.refs(...)`` calls all pass:
+the lint keys on literal shape, not on proving provenance — exactly like
+``lint_submit_api.py``. ``tests/`` is deliberately NOT scanned: the shim
+contract itself (bare ints warn, then keep working) is pinned by tests
+that must type bare ints. ``ShardedKVPool.defragment`` takes a page
+list while ``PagedKVCache.defragment`` takes a sequence-slot int, so
+only the list-literal rule applies to ``defragment`` — ``.defragment(0)``
+is a slot, not a page id.
+
+Usage: python tools/lint_pageref_api.py [--root DIR]
+Exit status 1 if any bare-int page-id call site is found (CI lint job).
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import pathlib
+import re
+import sys
+import tokenize
+
+SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+#: APIs whose pages argument is a list of handles.
+PAGE_LIST_APIS = ("move_pages", "release", "page_rows", "flip_ownership",
+                  "ensure_resident", "defragment")
+#: A list/tuple literal whose elements are ALL bare int literals. The
+#: lookbehind rejects indexing brackets (``flipped[0]``, ``pages[1]``).
+INT_LIST = re.compile(
+    r"(?<![\w\])])[\[(]\s*\d+\s*(?:,\s*\d+\s*)*,?\s*[\])]")
+CALL = re.compile(
+    r"\.(" + "|".join(PAGE_LIST_APIS) + r")\(|(?<![\w.])kv_pages\s*=")
+WRITE_PAGE = re.compile(r"\.write_page\(\s*(\d)")
+
+
+def _call_window(text: str, open_paren: int) -> str:
+    """Return the balanced ``(...)`` argument window starting at open_paren."""
+    depth = 0
+    for i in range(open_paren, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return text[open_paren + 1:i]
+    return text[open_paren + 1:]
+
+
+def _kwarg_window(text: str, start: int) -> str:
+    """The ``kv_pages=`` value expression up to the enclosing ``,`` / ``)``."""
+    depth = 0
+    for i in range(start, len(text)):
+        c = text[i]
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            if depth == 0:
+                return text[start:i]
+            depth -= 1
+        elif c == "," and depth == 0:
+            return text[start:i]
+    return text[start:]
+
+
+def _blank_strings_and_comments(text: str) -> str:
+    """Replace string/comment token contents with spaces (same offsets), so
+    docstrings showing the deprecated bare-int form don't trip the scan."""
+    out = list(text)
+    starts = [0]                       # starts[row-1] = offset of 1-based row
+    for ln in text.splitlines(keepends=True):
+        starts.append(starts[-1] + len(ln))
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except tokenize.TokenError:
+        return text
+    for tok in tokens:
+        if tok.type in (tokenize.STRING, tokenize.COMMENT):
+            a = starts[tok.start[0] - 1] + tok.start[1]
+            b = starts[tok.end[0] - 1] + tok.end[1]
+            for i in range(a, min(b, len(out))):
+                if out[i] != "\n":
+                    out[i] = " "
+    return "".join(out)
+
+
+def lint_file(path: pathlib.Path) -> list:
+    text = _blank_strings_and_comments(path.read_text())
+    findings = []
+    for m in CALL.finditer(text):
+        line = text.count("\n", 0, m.start()) + 1
+        if m.group(0).startswith("kv_pages"):
+            window = _kwarg_window(text, m.end())
+            api = "kv_pages="
+        else:
+            window = _call_window(text, m.end() - 1)
+            api = f".{m.group(1)}(...)"
+        hit = INT_LIST.search(window)
+        if hit:
+            findings.append((line, f"{api} takes PageRef handles; "
+                                   f"{hit.group(0)!r} is a bare int-literal "
+                                   "page list — mint handles via the pool "
+                                   "(alloc_on/refs/defragment/"
+                                   "flip_ownership)"))
+    for m in WRITE_PAGE.finditer(text):
+        line = text.count("\n", 0, m.start()) + 1
+        findings.append((line, ".write_page(...) takes a PageRef handle; "
+                               "a bare int-literal page id leans on the "
+                               "one-release deprecation shim"))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=pathlib.Path,
+                    default=pathlib.Path(__file__).resolve().parent.parent)
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for rel in SCAN_DIRS:
+        base = args.root / rel
+        for path in sorted(base.rglob("*.py")):
+            for line, msg in lint_file(path):
+                print(f"{path.relative_to(args.root)}:{line}: "
+                      f"bare-int page-id call site: {msg}")
+                failures += 1
+    if failures:
+        print(f"\n{failures} bare-int page-id call site(s); first-party "
+              "code must hold PageRef handles (DESIGN.md §11) — the int "
+              "shim exists for out-of-tree callers, for one release.",
+              file=sys.stderr)
+        return 1
+    print("pageref-api lint: all first-party call sites hold PageRef "
+          "handles")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
